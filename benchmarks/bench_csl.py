@@ -1,0 +1,79 @@
+"""Table 4 — Cold-Start-Latency reduction techniques, measured for real.
+
+One row per CSL family on a matched model endpoint:
+  baseline        full cold start (trace + init + device_put + XLA compile)
+  cache_runtime   warm python/bundle, cold weights+compile (PCPM-like)
+  snapshot        vHive/Catalyzer-style restore (.npz + executable cache)
+  fusion          2-stage chain fused into one program vs two compiles
+  faaslight       partial load: embedding+first layers only, rest deferred
+                  (measured as param-subset device_put time)
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.engine import InferenceEngine, SnapshotStore, fuse_chain
+
+
+def run(emit):
+    store = SnapshotStore("/tmp/coldjax_bench_snaps")
+    arch = "granite-3-2b"
+
+    # baseline: fully cold
+    e = InferenceEngine(arch, smoke=True, max_seq=32, batch=1, store=None)
+    bd_base = e.cold_start()
+    emit("csl/baseline_cold", bd_base.total * 1e6, "full trace+load+compile")
+
+    # cache-based: executable cached in-process, weights re-materialised
+    e2 = InferenceEngine(arch, smoke=True, max_seq=32, batch=1, store=store)
+    e2.cold_start()                       # populate caches
+    e2.shutdown()
+    t0 = time.perf_counter()
+    e2.cold_start(from_snapshot=False)    # exec cache hit, params re-init
+    cache_s = time.perf_counter() - t0
+    emit("csl/cache_runtime", cache_s * 1e6,
+         f"{bd_base.total / cache_s:.1f}x vs baseline")
+
+    # snapshot restore
+    e2.shutdown()
+    bd_snap = e2.cold_start(from_snapshot=True)
+    emit("csl/snapshot_restore", bd_snap.total * 1e6,
+         f"{bd_base.total / bd_snap.total:.1f}x vs baseline "
+         f"(paper claim: ~3.7x, vHive)")
+
+    # fusion: chain of two stages — one compile vs two
+    stages = []
+    compile_times = []
+    for a in (arch, "h2o-danube-3-4b"):
+        ei = InferenceEngine(a, smoke=True, max_seq=32, batch=1)
+        bd = ei.cold_start()
+        from repro.core.lifecycle import Phase
+        compile_times.append(bd.seconds[Phase.CODE_INIT])
+        stages.append(ei)
+    fused_fn, fused_compile_s = fuse_chain(stages, decode_steps=2)
+    unfused = sum(compile_times)
+    emit("csl/fusion_two_compiles", unfused * 1e6, "separate stage compiles")
+    emit("csl/fusion_one_compile", fused_compile_s * 1e6,
+         f"{unfused / fused_compile_s:.2f}x vs separate "
+         "(eliminates 2nd cold start entirely)")
+
+    # faaslight: load only embedding + first-period params
+    params = stages[0].params
+    flat = jax.tree.flatten_with_path(params)[0] if hasattr(jax.tree, "flatten_with_path") else None
+    leaves = jax.tree.leaves(params)
+    host = [np.asarray(x) for x in leaves]
+    t0 = time.perf_counter()
+    _ = [jax.device_put(h) for h in host]
+    jax.block_until_ready(_)
+    full_load = time.perf_counter() - t0
+    core = host[: max(1, len(host) // 3)]
+    t0 = time.perf_counter()
+    _ = [jax.device_put(h) for h in core]
+    jax.block_until_ready(_)
+    core_load = time.perf_counter() - t0
+    emit("csl/faaslight_full_load", full_load * 1e6, "")
+    emit("csl/faaslight_core_load", core_load * 1e6,
+         f"{full_load / max(core_load, 1e-9):.1f}x vs full load "
+         "(rest streamed during first exec)")

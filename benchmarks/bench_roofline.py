@@ -1,0 +1,29 @@
+"""Assignment deliverable (g): summarise the dry-run + roofline sweeps into
+the per-(arch × shape) table (also rendered in EXPERIMENTS.md)."""
+import json
+import os
+
+
+def run(emit):
+    if not os.path.exists("roofline_results.json"):
+        emit("roofline/missing", 0.0, "run repro.launch.roofline first")
+        return
+    with open("roofline_results.json") as f:
+        recs = json.load(f)
+    for r in recs:
+        if r.get("status") != "ok":
+            continue
+        name = f"roofline/{r['arch']}/{r['shape']}"
+        emit(f"{name}/compute", r["compute_s"] * 1e6, "")
+        emit(f"{name}/memory", r["memory_s"] * 1e6, "")
+        emit(f"{name}/collective", r["collective_s"] * 1e6,
+             f"dominant={r['dominant']} useful={r['useful_flops_ratio']} "
+             f"mfu_bound={r['mfu_upper_bound']}")
+    if os.path.exists("dryrun_results.json"):
+        with open("dryrun_results.json") as f:
+            dr = json.load(f)
+        ok = sum(1 for r in dr if r["status"] == "ok")
+        sk = sum(1 for r in dr if r["status"] == "skipped")
+        er = sum(1 for r in dr if r["status"] == "error")
+        emit("dryrun/pairs_ok", ok * 1e6, f"skipped={sk} errors={er} "
+             "(both meshes)")

@@ -1,0 +1,52 @@
+"""§6 open-challenges quantified: the energy/practicality/model-performance
+trade-offs — Pareto of cold-start frequency vs wasted GB-s, and predictor
+accuracy (incl. the §6.3 claim that simple models beat DL on small noisy
+cold-start data)."""
+import numpy as np
+
+from repro.core.policies import suite
+from repro.core.predictors import (EWMAPredictor, ExpSmoothingPredictor,
+                                   HistogramPredictor, MarkovPredictor)
+from repro.core.simulator import simulate
+from repro.core.workload import azure_like, interarrival_series
+
+
+def run(emit):
+    tr = azure_like(900.0, num_functions=20, seed=31)
+    # --- Pareto: frequency vs waste across the whole catalog -------------- #
+    for pol in ["cold_always", "provider_short", "provider_default",
+                "periodic_ping", "prewarm_histogram", "faascache",
+                "beyond_combo"]:
+        s = simulate(tr, suite(pol)).summary()
+        emit(f"pareto/{pol}", s["cold_start_frequency"] * 1e8,
+             f"waste_gb_s={s['idle_gb_s']:.1f} (freq%*1e6)")
+
+    # --- predictor accuracy on a noisy arrival process -------------------- #
+    hot = max(set(i.function for i in tr.invocations),
+              key=lambda f: sum(1 for i in tr.invocations if i.function == f))
+    times = np.cumsum(interarrival_series(tr, hot))
+    preds = {
+        "ewma": EWMAPredictor(),
+        "holt": ExpSmoothingPredictor(),
+        "markov": MarkovPredictor(),
+        "histogram": HistogramPredictor(),
+    }
+    try:
+        from repro.core.predictors.lstm import LSTMPredictor
+        preds["lstm"] = LSTMPredictor(train_every=48, epochs=20)
+    except Exception:
+        pass
+    times = times[:600]          # bounded eval window (LSTM is per-step jax)
+    errs = {k: [] for k in preds}
+    for name, p in preds.items():
+        for i, t in enumerate(times[:-1]):
+            p.observe(float(t))
+            if i >= 8:
+                nxt = p.predict_next()
+                if nxt is not None:
+                    errs[name].append(abs(nxt - times[i + 1]))
+    for name, e in errs.items():
+        if e:
+            emit(f"predictor_mae/{name}", float(np.mean(e)) * 1e6,
+                 f"n={len(e)} (paper §6.3: simple models can beat DL on "
+                 "small noisy data)")

@@ -1,0 +1,53 @@
+"""Benchmark harness — one module per paper table/figure (DESIGN.md §5).
+
+Prints ``name,us_per_call,derived`` CSV.  Modules:
+  bench_factors    RQ2 / Fig.10+12: measured cold-start anatomy & factors
+  bench_qos        RQ1 / Fig.11: QoS impact of cold starts
+  bench_csl        Table 4: latency-reduction techniques (real, measured)
+  bench_csf        Table 5: frequency-reduction techniques (simulated)
+  bench_tradeoffs  §6: energy/accuracy Pareto + predictor study
+  bench_serving    serving microbenchmarks + compile-time (scan vs unroll)
+  bench_roofline   dry-run/roofline summary (deliverables e+g)
+"""
+import sys
+import time
+import traceback
+
+from benchmarks import (bench_csf, bench_csl, bench_factors,
+                        bench_platforms, bench_qos, bench_roofline,
+                        bench_serving, bench_tradeoffs)
+
+MODULES = [
+    ("factors", bench_factors),
+    ("qos", bench_qos),
+    ("csl", bench_csl),
+    ("csf", bench_csf),
+    ("tradeoffs", bench_tradeoffs),
+    ("platforms", bench_platforms),
+    ("serving", bench_serving),
+    ("roofline", bench_roofline),
+]
+
+
+def main() -> None:
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+
+    def emit(name: str, us: float, derived: str = ""):
+        print(f"{name},{us:.1f},{derived}", flush=True)
+
+    for name, mod in MODULES:
+        if only and only != name:
+            continue
+        t0 = time.perf_counter()
+        try:
+            mod.run(emit)
+            emit(f"_module/{name}/wall", (time.perf_counter() - t0) * 1e6, "ok")
+        except Exception:
+            traceback.print_exc()
+            emit(f"_module/{name}/wall", (time.perf_counter() - t0) * 1e6,
+                 "ERROR")
+
+
+if __name__ == "__main__":
+    main()

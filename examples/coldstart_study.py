@@ -1,0 +1,39 @@
+"""Cold-start policy study — the paper's Table 4/5 in one script.
+
+Simulates a realistic Azure-like function mix under every mitigation family
+in the taxonomy (keep-alive, pools, predictive prewarming, scheduling,
+snapshot restore, fusion) with the measured-calibrated cost model, and
+prints the QoS comparison + the §6.1 latency/waste Pareto.
+
+Run:  PYTHONPATH=src python examples/coldstart_study.py
+"""
+from repro.core.metrics import format_summary
+from repro.core.policies import CATALOG, suite
+from repro.core.policies.fusion import apply_fusion
+from repro.core.simulator import simulate
+from repro.core.workload import azure_like, chains
+
+
+def main():
+    tr = azure_like(900.0, num_functions=25, seed=0)
+    print(f"workload: {len(tr.invocations)} invocations / "
+          f"{len(tr.functions)} functions / {tr.horizon:.0f}s horizon\n")
+    print("== taxonomy sweep " + "=" * 50)
+    for name in CATALOG:
+        if name == "prewarm_lstm":
+            continue  # slow on CPU; see benchmarks/bench_tradeoffs.py
+        led = simulate(tr, suite(name))
+        print(format_summary(name, led.summary()))
+
+    print("\n== function fusion on a 3-stage chain workload " + "=" * 20)
+    ctr = chains(rate=0.05, horizon=600.0, chain_len=3, seed=1)
+    plain = simulate(ctr, suite("provider_short")).summary()
+    fused = simulate(apply_fusion(ctr), suite("provider_short")).summary()
+    print(format_summary("chains_unfused", plain))
+    print(format_summary("chains_fused", fused))
+    print(f"fusion removed {plain['cold_starts'] - fused['cold_starts']:.0f} "
+          f"of {plain['cold_starts']:.0f} cold starts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Render the EXPERIMENTS.md tables from the sweep JSONs."""
+import json
+import sys
+
+
+def load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def dryrun_table(recs, mesh):
+    rows = [r for r in recs if r["mesh"] == mesh]
+    out = [f"| arch | shape | status | compile_s | peak GiB/dev | HLO GFLOP/dev | coll GiB/dev |",
+           "|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["status"] == "ok":
+            peak = r["bytes_per_device"]["peak"] / 2**30
+            out.append(
+                f"| {r['arch']} | {r['shape']} | ok | {r['compile_s']:.1f} | "
+                f"{peak:.2f} | {r['hlo_flops'] / 1e9:.1f} | "
+                f"{r['collective_bytes_total'] / 2**30:.2f} |")
+        else:
+            out.append(f"| {r['arch']} | {r['shape']} | {r['status']} | — | — | — | — |")
+    return "\n".join(out)
+
+
+def roofline_table(recs, base=None):
+    basemap = {}
+    if base:
+        basemap = {(r["arch"], r["shape"]): r for r in base
+                   if r.get("status") == "ok"}
+    out = ["| arch | shape | compute_s | memory_s | collective_s | dominant | "
+           "useful | MFU bound | baseline bound | Δ |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r.get("status") != "ok":
+            if r.get("status") == "skipped":
+                out.append(f"| {r['arch']} | {r['shape']} | skipped (long_500k "
+                           "needs sub-quadratic attention) | | | | | | | |")
+            continue
+        bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        b = basemap.get((r["arch"], r["shape"]))
+        if b:
+            bb = max(b["compute_s"], b["memory_s"], b["collective_s"])
+            delta = f"{bb / bound:.1f}x" if bound > 0 else "—"
+            bbs = f"{bb:.3f}"
+        else:
+            bbs, delta = "—", "—"
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3f} | "
+            f"{r['memory_s']:.3f} | {r['collective_s']:.4f} | {r['dominant']} | "
+            f"{r['useful_flops_ratio']:.2f} | {r['mfu_upper_bound']:.4f} | "
+            f"{bbs} | {delta} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    which = sys.argv[1]
+    if which == "dryrun":
+        recs = load("dryrun_results.json")
+        print("### single pod (16×16 = 256 chips)\n")
+        print(dryrun_table(recs, "16x16"))
+        print("\n### multi-pod (2×16×16 = 512 chips)\n")
+        print(dryrun_table(recs, "2x16x16"))
+    elif which == "roofline":
+        recs = load("roofline_results.json")
+        try:
+            base = load("roofline_results_baseline.json")
+        except FileNotFoundError:
+            base = None
+        print(roofline_table(recs, base))

@@ -1,0 +1,1 @@
+"""ColdJAX core: the paper's taxonomy as a composable framework."""

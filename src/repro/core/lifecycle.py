@@ -1,0 +1,99 @@
+"""Cold-start anatomy (paper Fig. 10) — phases, container FSM.
+
+The paper decomposes a cold start into: provisioning → runtime init →
+dependency load → code deploy/init → execute, with a keep-warm window τ and
+scale-to-zero afterwards.  In the JAX serving world (DESIGN.md §1) the
+phases map to: slice/process allocation, JAX import + first trace, parameter
+materialisation + host→device transfer, **XLA compilation**, and the jitted
+call itself.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+
+class Phase(str, enum.Enum):
+    PROVISION = "provision"          # container / device-slice allocation
+    RUNTIME_INIT = "runtime_init"    # language runtime / JAX import + trace
+    DEPS_LOAD = "deps_load"          # package / weights -> device
+    CODE_INIT = "code_init"          # function init / XLA compile
+    EXECUTE = "execute"
+
+
+STARTUP_PHASES = (Phase.PROVISION, Phase.RUNTIME_INIT, Phase.DEPS_LOAD,
+                  Phase.CODE_INIT)
+
+
+class ContainerState(str, enum.Enum):
+    PROVISIONING = "provisioning"
+    WARM_IDLE = "warm_idle"          # ready; clock to scale-to-zero running
+    ACTIVE = "active"                # executing a request
+    PAUSED = "paused"                # PCPM pause-pool: runtime up, no function
+    DEAD = "dead"
+
+
+@dataclass
+class Breakdown:
+    """Per-phase seconds of one startup."""
+
+    seconds: Dict[Phase, float] = field(default_factory=dict)
+
+    @property
+    def total(self) -> float:
+        return sum(self.seconds.values())
+
+    def scaled(self, factors: Dict[Phase, float]) -> "Breakdown":
+        return Breakdown({p: s * factors.get(p, 1.0)
+                          for p, s in self.seconds.items()})
+
+    def drop(self, *phases: Phase) -> "Breakdown":
+        return Breakdown({p: s for p, s in self.seconds.items()
+                          if p not in phases})
+
+    def replace(self, phase: Phase, seconds: float) -> "Breakdown":
+        d = dict(self.seconds)
+        d[phase] = seconds
+        return Breakdown(d)
+
+    def __repr__(self):
+        parts = ", ".join(f"{p.value}={s * 1e3:.1f}ms"
+                          for p, s in self.seconds.items())
+        return f"Breakdown({parts}, total={self.total * 1e3:.1f}ms)"
+
+
+@dataclass
+class FunctionSpec:
+    """A deployable 'serverless function' = one model endpoint."""
+
+    name: str
+    package_mb: float                 # weights + code bytes (RQ2 factor)
+    memory_mb: float                  # container RAM allocation (RQ2 factor)
+    runtime: str = "python-jit"       # python-eager | python-jit | aot (RQ2)
+    exec_time_s: float = 0.05         # mean warm execution time
+    arch: Optional[str] = None        # backing model architecture id
+    compile_cost: float = 1.0         # relative XLA compile complexity
+    chain: Optional[tuple] = None     # names of chained successor functions
+    sla_latency_s: Optional[float] = None
+
+
+@dataclass
+class Container:
+    id: int
+    function: Optional[str]           # None while in a generic pause-pool
+    state: ContainerState
+    worker: int
+    memory_mb: float
+    created_at: float
+    warm_since: float = 0.0
+    last_used: float = 0.0
+    uses: int = 0
+    expiry: float = float("inf")      # scale-to-zero deadline (policy-set)
+    has_snapshot: bool = False
+    sanitized: bool = True            # paper §6.6: state cleared on reuse
+
+    def is_reusable(self, function: str) -> bool:
+        return (self.state == ContainerState.WARM_IDLE
+                and self.function == function)

@@ -1,0 +1,112 @@
+"""QoS ledger — the paper's RQ1 parameters, measured.
+
+Latency (pctls), throughput, cost (pay-as-you-go GB-s + idle keep-warm GB-s
+— the energy/waste proxy of §6.1), SLA violations, cold-start count and
+frequency, scalability (containers launched /s), resource utilisation.
+"""
+from __future__ import annotations
+
+import bisect
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.core.lifecycle import Breakdown
+
+# AWS-Lambda-like pricing: $ per GB-second (x86, 2024) + per-request fee
+PRICE_PER_GB_S = 1.6667e-5
+PRICE_PER_REQUEST = 2e-7
+
+
+@dataclass
+class RequestRecord:
+    function: str
+    arrival: float
+    start: float                  # execution start (after any cold start)
+    end: float
+    cold: bool
+    startup: Optional[Breakdown] = None
+
+    @property
+    def latency(self) -> float:
+        return self.end - self.arrival
+
+    @property
+    def queue_wait(self) -> float:
+        startup = self.startup.total if self.startup else 0.0
+        return max(0.0, self.start - self.arrival - startup)
+
+
+def _pct(sorted_vals: List[float], q: float) -> float:
+    if not sorted_vals:
+        return float("nan")
+    idx = min(len(sorted_vals) - 1, max(0, math.ceil(q * len(sorted_vals)) - 1))
+    return sorted_vals[idx]
+
+
+@dataclass
+class QoSLedger:
+    records: List[RequestRecord] = field(default_factory=list)
+    # GB-seconds consumed while containers sit warm-idle (wasted resources)
+    idle_gb_s: float = 0.0
+    exec_gb_s: float = 0.0
+    containers_launched: int = 0
+    dropped: int = 0
+    horizon: float = 0.0
+    cluster_capacity_gb: float = 0.0
+    _busy_gb_s: float = 0.0
+
+    # ------------------------------------------------------------------ #
+    def record(self, rec: RequestRecord, *, memory_gb: float):
+        self.records.append(rec)
+        self.exec_gb_s += (rec.end - rec.start) * memory_gb
+        self._busy_gb_s += (rec.end - rec.arrival) * memory_gb
+
+    def add_idle(self, seconds: float, memory_gb: float):
+        self.idle_gb_s += seconds * memory_gb
+
+    # ------------------------------------------------------------------ #
+    def summary(self, *, sla_latency_s: Optional[float] = None) -> Dict[str, float]:
+        lat = sorted(r.latency for r in self.records)
+        colds = [r for r in self.records if r.cold]
+        cold_lat = sorted(r.latency for r in colds)
+        warm_lat = sorted(r.latency for r in self.records if not r.cold)
+        n = len(self.records)
+        horizon = self.horizon or (max((r.end for r in self.records), default=0.0))
+        out = {
+            "requests": float(n),
+            "throughput_rps": n / horizon if horizon else float("nan"),
+            "latency_p50_s": _pct(lat, 0.50),
+            "latency_p95_s": _pct(lat, 0.95),
+            "latency_p99_s": _pct(lat, 0.99),
+            "latency_mean_s": sum(lat) / n if n else float("nan"),
+            "warm_p50_s": _pct(warm_lat, 0.50),
+            "cold_p50_s": _pct(cold_lat, 0.50),
+            "cold_starts": float(len(colds)),
+            "cold_start_frequency": len(colds) / n if n else float("nan"),
+            "containers_launched": float(self.containers_launched),
+            "scalability_launch_rate": (self.containers_launched / horizon
+                                        if horizon else float("nan")),
+            "exec_gb_s": self.exec_gb_s,
+            "idle_gb_s": self.idle_gb_s,
+            "wasted_fraction": (self.idle_gb_s /
+                                max(self.exec_gb_s + self.idle_gb_s, 1e-12)),
+            "cost_usd": (self.exec_gb_s + self.idle_gb_s) * PRICE_PER_GB_S
+            + n * PRICE_PER_REQUEST,
+            "dropped": float(self.dropped),
+        }
+        if sla_latency_s is not None and n:
+            out["sla_violation_rate"] = (
+                sum(1 for r in self.records if r.latency > sla_latency_s) / n)
+        if self.cluster_capacity_gb and horizon:
+            out["utilization"] = self._busy_gb_s / (self.cluster_capacity_gb * horizon)
+        return out
+
+
+def format_summary(name: str, s: Dict[str, float]) -> str:
+    return (f"{name:28s} p50={s['latency_p50_s'] * 1e3:8.1f}ms "
+            f"p99={s['latency_p99_s'] * 1e3:8.1f}ms "
+            f"cold%={s['cold_start_frequency'] * 100:5.2f} "
+            f"waste%={s['wasted_fraction'] * 100:5.1f} "
+            f"cost=${s['cost_usd']:.4f} "
+            f"thr={s['throughput_rps']:.1f}rps")

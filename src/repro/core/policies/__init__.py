@@ -1,0 +1,78 @@
+"""Policy catalog: named PolicySuites covering the paper's taxonomy.
+
+``suite(name)`` returns a fresh PolicySuite; ``CATALOG`` lists everything
+(benchmarks iterate it for the Table-5 comparison).
+"""
+from __future__ import annotations
+
+from repro.core.policies.base import Placement, PolicySuite, Startup
+from repro.core.policies.keepalive import FixedTTL, GreedyDualKeepAlive, LCS
+from repro.core.policies.prewarm import (HybridPrewarm, PeriodicPing,
+                                         RLKeepAlive, ewma_prewarm,
+                                         histogram_prewarm, holt_prewarm,
+                                         lstm_prewarm, markov_prewarm)
+from repro.core.policies.scheduling import CASPlacement, ENSUREScaling
+
+
+def suite(name: str, **kw) -> PolicySuite:
+    return _FACTORIES[name](**kw)
+
+
+def _mk(name, **fields):
+    def factory(**kw):
+        f = {k: (v() if callable(v) else v) for k, v in fields.items()}
+        f.update(kw)
+        return PolicySuite(name=name, **f)
+    return factory
+
+
+_FACTORIES = {
+    # --- baselines ------------------------------------------------------ #
+    "cold_always": _mk("cold_always", keepalive=lambda: FixedTTL(0.0)),
+    "provider_default": _mk("provider_default",
+                            keepalive=lambda: FixedTTL(600.0)),
+    "provider_short": _mk("provider_short", keepalive=lambda: FixedTTL(60.0)),
+    # --- CSL: startup-path reductions (Table 4 families) ----------------- #
+    "snapshot_restore": _mk("snapshot_restore",
+                            keepalive=lambda: FixedTTL(600.0),
+                            startup=Startup(snapshot=True)),
+    "pause_pool": _mk("pause_pool", keepalive=lambda: FixedTTL(600.0),
+                      startup=Startup(pause_pool_size=8)),
+    "faaslight": _mk("faaslight", keepalive=lambda: FixedTTL(600.0),
+                     startup=Startup(deps_fraction=0.35,
+                                     first_run_penalty_frac=0.4)),
+    "csl_combined": _mk("csl_combined", keepalive=lambda: FixedTTL(600.0),
+                        startup=Startup(snapshot=True, pause_pool_size=8)),
+    # --- CSF: keep-alive / pools / scheduling (Table 5 families) --------- #
+    "faascache": _mk("faascache", keepalive=GreedyDualKeepAlive),
+    "lcs": _mk("lcs", keepalive=LCS),
+    "periodic_ping": _mk("periodic_ping", keepalive=lambda: FixedTTL(600.0),
+                         prewarm=PeriodicPing),
+    "prewarm_ewma": _mk("prewarm_ewma", keepalive=lambda: FixedTTL(60.0),
+                        prewarm=ewma_prewarm),
+    "prewarm_holt": _mk("prewarm_holt", keepalive=lambda: FixedTTL(60.0),
+                        prewarm=holt_prewarm),
+    "prewarm_markov": _mk("prewarm_markov", keepalive=lambda: FixedTTL(60.0),
+                          prewarm=markov_prewarm),
+    "prewarm_histogram": _mk("prewarm_histogram",
+                             keepalive=lambda: FixedTTL(60.0),
+                             prewarm=histogram_prewarm),
+    "prewarm_lstm": _mk("prewarm_lstm", keepalive=lambda: FixedTTL(60.0),
+                        prewarm=lstm_prewarm),
+    "rl_keepalive": _mk("rl_keepalive", keepalive=RLKeepAlive),
+    "cas": _mk("cas", keepalive=lambda: FixedTTL(600.0),
+               placement=lambda: CASPlacement()),
+    "ensure": _mk("ensure", keepalive=lambda: FixedTTL(600.0),
+                  prewarm=ENSUREScaling),
+    # --- beyond-paper hybrids -------------------------------------------- #
+    "hybrid_prewarm": _mk("hybrid_prewarm", keepalive=lambda: FixedTTL(60.0),
+                          prewarm=HybridPrewarm),
+    "beyond_combo": _mk("beyond_combo", keepalive=GreedyDualKeepAlive,
+                        prewarm=HybridPrewarm,
+                        placement=lambda: CASPlacement(),
+                        startup=Startup(snapshot=True, pause_pool_size=4)),
+}
+
+CATALOG = tuple(_FACTORIES)
+
+__all__ = ["suite", "CATALOG", "PolicySuite", "Startup"]

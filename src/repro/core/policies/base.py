@@ -1,0 +1,106 @@
+"""Policy interfaces — the taxonomy of Fig. 13 as composable components.
+
+A :class:`PolicySuite` bundles one choice from each mitigation family:
+
+  keepalive   CSF: when does a warm container scale to zero (τ), and which
+              warm container is evicted first under memory pressure
+  prewarm     CSF: proactive container preparation (periodic ping,
+              histogram/EWMA/Markov/LSTM/RL predictors)
+  placement   CSF: request→worker scheduling (CAS lifecycle-awareness)
+  startup     CSL: how a cold start is shortened (snapshot restore, pause
+              pool, partial dependency loading, runtime choice)
+
+The discrete-event simulator (``core/simulator.py``) and the real JAX
+serving engine (``serving/engine.py``) both consume these interfaces.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, TYPE_CHECKING
+
+from repro.core.lifecycle import Container, FunctionSpec
+
+if TYPE_CHECKING:
+    from repro.core.simulator import SimContext
+
+
+class KeepAlive:
+    """Decides τ per container and the eviction order under pressure."""
+
+    name = "base"
+
+    def ttl(self, container: Container, ctx: "SimContext") -> float:
+        raise NotImplementedError
+
+    def evict_order(self, candidates: Sequence[Container],
+                    ctx: "SimContext") -> List[Container]:
+        """Least-valuable first.  Default: LRU."""
+        return sorted(candidates, key=lambda c: c.last_used)
+
+    def on_reuse(self, container: Container, ctx: "SimContext") -> None:
+        pass
+
+
+class Prewarm:
+    """Proactive warm-container preparation from invocation history."""
+
+    name = "none"
+    tick_interval: float = 1.0
+
+    def observe(self, function: str, t: float) -> None:
+        pass
+
+    def decisions(self, t: float, ctx: "SimContext") -> List[str]:
+        """Functions that should have (at least) one warm container *now*."""
+        return []
+
+
+class Placement:
+    """Request routing across workers (the scheduler of §5.3.2)."""
+
+    name = "first-fit"
+
+    def choose_container(self, function: str, ctx: "SimContext") -> Optional[Container]:
+        warm = ctx.warm_idle(function)
+        return warm[0] if warm else None
+
+    def choose_worker(self, fn: FunctionSpec, ctx: "SimContext") -> Optional[int]:
+        for w in range(ctx.num_workers):
+            if ctx.free_mb(w) >= fn.memory_mb:
+                return w
+        return None
+
+
+@dataclass(frozen=True)
+class Startup:
+    """Cold-start-latency reduction settings (CSL half of the taxonomy)."""
+
+    snapshot: bool = False            # vHive/Catalyzer/SEUSS restore path
+    pause_pool_size: int = 0          # PCPM paused containers (generic)
+    pause_pool_mb: float = 128.0      # footprint of a paused container
+    deps_fraction: float = 1.0        # FaaSLight partial load (<1.0)
+    first_run_penalty_frac: float = 0.0  # deferred-load cost on first exec
+
+
+@dataclass
+class PolicySuite:
+    name: str
+    keepalive: KeepAlive
+    prewarm: Optional[Prewarm] = None
+    placement: Placement = field(default_factory=Placement)
+    startup: Startup = field(default_factory=Startup)
+
+    def describe(self) -> str:
+        bits = [f"keepalive={self.keepalive.name}"]
+        if self.prewarm:
+            bits.append(f"prewarm={self.prewarm.name}")
+        bits.append(f"placement={self.placement.name}")
+        st = self.startup
+        if st.snapshot:
+            bits.append("snapshot")
+        if st.pause_pool_size:
+            bits.append(f"pause_pool={st.pause_pool_size}")
+        if st.deps_fraction < 1.0:
+            bits.append(f"faaslight={st.deps_fraction}")
+        return f"{self.name}({', '.join(bits)})"

@@ -1,0 +1,8 @@
+"""Time-series predictors backing the AI/ML prewarm policies (§5.3.2,
+ATOM/MASTER/Fifer/FaaStest/HotC lineage)."""
+from repro.core.predictors.ewma import EWMAPredictor, ExpSmoothingPredictor
+from repro.core.predictors.markov import MarkovPredictor
+from repro.core.predictors.histogram import HistogramPredictor
+
+__all__ = ["EWMAPredictor", "ExpSmoothingPredictor", "MarkovPredictor",
+           "HistogramPredictor"]

@@ -1,0 +1,130 @@
+"""Pure-JAX LSTM inter-arrival forecaster (the ATOM/MASTER/Fifer family).
+
+A small single-layer LSTM regresses the next log-gap from the previous
+``seq_len`` log-gaps.  Trained online in replay batches with Adam (the
+trainer is jitted once and reused — the predictor itself is a 'function'
+whose compile time the framework measures).  Deliberately tiny: the paper's
+§6.3 notes that heavyweight DL models on small noisy cold-start datasets
+underperform — we validate exactly that in benchmarks/bench_tradeoffs.py.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _init_lstm(rng, in_dim: int, hidden: int):
+    k1, k2, k3 = jax.random.split(rng, 3)
+    scale = (in_dim + hidden) ** -0.5
+    return {
+        "wx": jax.random.normal(k1, (in_dim, 4 * hidden)) * scale,
+        "wh": jax.random.normal(k2, (hidden, 4 * hidden)) * scale,
+        "b": jnp.zeros((4 * hidden,)).at[hidden: 2 * hidden].set(1.0),  # forget
+        "wo": jax.random.normal(k3, (hidden, 1)) * hidden ** -0.5,
+        "bo": jnp.zeros((1,)),
+    }
+
+
+@jax.jit
+def _lstm_apply(params, xs):
+    """xs: (B, T, 1) -> (B,) prediction of the next value."""
+    h0 = jnp.zeros((xs.shape[0], params["wh"].shape[0]))
+    c0 = h0
+
+    def step(carry, x_t):
+        h, c = carry
+        z = x_t @ params["wx"] + h @ params["wh"] + params["b"]
+        i, f, g, o = jnp.split(z, 4, axis=-1)
+        c = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+        h = jax.nn.sigmoid(o) * jnp.tanh(c)
+        return (h, c), None
+
+    (h, _), _ = jax.lax.scan(step, (h0, c0), jnp.moveaxis(xs, 1, 0))
+    return (h @ params["wo"] + params["bo"])[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=())
+def _train_epoch(params, opt_state, xs, ys, lr):
+    def loss_fn(p):
+        pred = _lstm_apply(p, xs)
+        return jnp.mean((pred - ys) ** 2)
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    m, v, t = opt_state
+    t = t + 1
+    m = jax.tree.map(lambda a, g: 0.9 * a + 0.1 * g, m, grads)
+    v = jax.tree.map(lambda a, g: 0.999 * a + 0.001 * g * g, v, grads)
+    mhat = jax.tree.map(lambda a: a / (1 - 0.9 ** t), m)
+    vhat = jax.tree.map(lambda a: a / (1 - 0.999 ** t), v)
+    params = jax.tree.map(lambda p, mm, vv: p - lr * mm / (jnp.sqrt(vv) + 1e-8),
+                          params, mhat, vhat)
+    return params, (m, v, t), loss
+
+
+class LSTMPredictor:
+    name = "lstm"
+
+    def __init__(self, hidden: int = 16, seq_len: int = 8,
+                 train_every: int = 32, epochs: int = 40, seed: int = 0):
+        self.hidden, self.seq_len = hidden, seq_len
+        self.train_every, self.epochs = train_every, epochs
+        self.params = _init_lstm(jax.random.key(seed), 1, hidden)
+        z = jax.tree.map(jnp.zeros_like, self.params)
+        self.opt_state = (z, jax.tree.map(jnp.zeros_like, self.params), 0)
+        self.gaps: list = []
+        self.last_t: Optional[float] = None
+        self._since_train = 0
+        self.losses: list = []
+
+    # ------------------------------------------------------------------ #
+    def observe(self, t: float) -> None:
+        if self.last_t is not None:
+            self.gaps.append(max(t - self.last_t, 1e-3))
+            self._since_train += 1
+            if (self._since_train >= self.train_every
+                    and len(self.gaps) > self.seq_len + 4):
+                self._train()
+                self._since_train = 0
+        self.last_t = t
+
+    MAX_WINDOWS = 128
+
+    def _windows(self):
+        lg = np.log(np.asarray(self.gaps[-512:], np.float32))
+        n = len(lg) - self.seq_len
+        xs = np.stack([lg[i: i + self.seq_len] for i in range(n)])[..., None]
+        ys = lg[self.seq_len:]
+        # fixed batch shape -> the jitted trainer never recompiles
+        if n >= self.MAX_WINDOWS:
+            xs, ys = xs[-self.MAX_WINDOWS:], ys[-self.MAX_WINDOWS:]
+        else:
+            reps = -(-self.MAX_WINDOWS // n)
+            xs = np.tile(xs, (reps, 1, 1))[: self.MAX_WINDOWS]
+            ys = np.tile(ys, reps)[: self.MAX_WINDOWS]
+        return jnp.asarray(xs), jnp.asarray(ys)
+
+    def _train(self):
+        xs, ys = self._windows()
+        for _ in range(self.epochs):
+            self.params, self.opt_state, loss = _train_epoch(
+                self.params, self.opt_state, xs, ys, jnp.float32(1e-2))
+        self.losses.append(float(loss))
+
+    # ------------------------------------------------------------------ #
+    def predict_next(self) -> Optional[float]:
+        if self.last_t is None or len(self.gaps) < self.seq_len:
+            return None
+        lg = np.log(np.asarray(self.gaps[-self.seq_len:], np.float32))
+        xs = jnp.asarray(lg)[None, :, None]
+        pred = float(_lstm_apply(self.params, xs)[0])
+        return self.last_t + float(np.exp(np.clip(pred, -7, 9)))
+
+    def uncertainty(self) -> float:
+        if len(self.gaps) < 4:
+            return float("inf")
+        lg = np.log(np.asarray(self.gaps[-64:], np.float32))
+        return float(np.std(lg) * np.mean(self.gaps[-64:]))

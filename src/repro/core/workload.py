@@ -1,0 +1,187 @@
+"""Workload trace generators (deterministic, seeded).
+
+Families cover the regimes the surveyed papers evaluate on: steady Poisson,
+bursty on/off, diurnal (sinusoidal rate), flash crowd (sudden spike — the
+concurrency factor of RQ2), cold-heavy Zipf application mixes (the Azure
+FaaS trace shape: a few hot functions + a long tail of rare ones), and
+function *chains* (Xanadu/fusion material).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.lifecycle import FunctionSpec
+
+
+@dataclass(frozen=True)
+class Invocation:
+    time: float
+    function: str
+    chain: Tuple[str, ...] = ()       # successor calls (sequential chain)
+
+
+@dataclass
+class Trace:
+    invocations: List[Invocation]
+    functions: Dict[str, FunctionSpec]
+    horizon: float
+
+    def __post_init__(self):
+        self.invocations.sort(key=lambda i: i.time)
+
+    @property
+    def rate(self) -> float:
+        return len(self.invocations) / self.horizon if self.horizon else 0.0
+
+
+def _mk_functions(n: int, *, package_mb=64.0, memory_mb=1024.0,
+                  exec_time_s=0.08, runtime="python-jit") -> Dict[str, FunctionSpec]:
+    return {
+        f"fn{i}": FunctionSpec(
+            name=f"fn{i}", package_mb=package_mb, memory_mb=memory_mb,
+            exec_time_s=exec_time_s, runtime=runtime)
+        for i in range(n)
+    }
+
+
+def poisson(rate: float, horizon: float, *, num_functions: int = 1,
+            seed: int = 0, zipf_a: float = 1.2, **fn_kw) -> Trace:
+    """Poisson arrivals; functions chosen from a Zipf popularity law."""
+    rng = np.random.default_rng(seed)
+    fns = _mk_functions(num_functions, **fn_kw)
+    names = list(fns)
+    t, inv = 0.0, []
+    ranks = np.arange(1, num_functions + 1, dtype=np.float64) ** -zipf_a
+    probs = ranks / ranks.sum()
+    while True:
+        t += rng.exponential(1.0 / rate)
+        if t >= horizon:
+            break
+        inv.append(Invocation(t, names[rng.choice(num_functions, p=probs)]))
+    return Trace(inv, fns, horizon)
+
+
+def _thinned(rng, horizon: float, rate_fn, r_max: float):
+    """Inhomogeneous Poisson via thinning (never steps over rate changes)."""
+    t, out = 0.0, []
+    while True:
+        t += rng.exponential(1.0 / r_max)
+        if t >= horizon:
+            return out
+        if rng.random() < rate_fn(t) / r_max:
+            out.append(t)
+
+
+def bursty(base_rate: float, burst_rate: float, horizon: float, *,
+           period: float = 60.0, duty: float = 0.2, num_functions: int = 1,
+           seed: int = 0, **fn_kw) -> Trace:
+    """On/off bursts: rate alternates base <-> burst with given duty cycle."""
+    rng = np.random.default_rng(seed)
+    fns = _mk_functions(num_functions, **fn_kw)
+    names = list(fns)
+    rate = lambda t: burst_rate if (t % period) < duty * period else base_rate
+    inv = [Invocation(t, names[rng.integers(num_functions)])
+           for t in _thinned(rng, horizon, rate, burst_rate)]
+    return Trace(inv, fns, horizon)
+
+
+def diurnal(peak_rate: float, horizon: float, *, period: float = 600.0,
+            floor: float = 0.05, num_functions: int = 1, seed: int = 0,
+            **fn_kw) -> Trace:
+    """Sinusoidal rate (thinned Poisson)."""
+    rng = np.random.default_rng(seed)
+    fns = _mk_functions(num_functions, **fn_kw)
+    names = list(fns)
+    t, inv = 0.0, []
+    while t < horizon:
+        t += rng.exponential(1.0 / peak_rate)
+        if t >= horizon:
+            break
+        phase = 0.5 * (1 - math.cos(2 * math.pi * t / period))
+        if rng.random() < floor + (1 - floor) * phase:
+            inv.append(Invocation(t, names[rng.integers(num_functions)]))
+    return Trace(inv, fns, horizon)
+
+
+def flash_crowd(base_rate: float, spike_rate: float, horizon: float, *,
+                spike_at: float = 0.5, spike_len: float = 10.0,
+                num_functions: int = 1, seed: int = 0, **fn_kw) -> Trace:
+    """Steady traffic with one sudden spike (concurrency / RQ2 factor)."""
+    rng = np.random.default_rng(seed)
+    fns = _mk_functions(num_functions, **fn_kw)
+    names = list(fns)
+    t0 = spike_at * horizon
+    rate = lambda t: spike_rate if t0 <= t < t0 + spike_len else base_rate
+    inv = [Invocation(t, names[rng.integers(num_functions)])
+           for t in _thinned(rng, horizon, rate, spike_rate)]
+    return Trace(inv, fns, horizon)
+
+
+def rare(inter_arrival: float, horizon: float, *, jitter: float = 0.3,
+         num_functions: int = 1, seed: int = 0, **fn_kw) -> Trace:
+    """Sparse, roughly periodic invocations — the keep-alive-defeating case
+    (every gap exceeds the provider's fixed τ)."""
+    rng = np.random.default_rng(seed)
+    fns = _mk_functions(num_functions, **fn_kw)
+    inv = []
+    for name in fns:
+        t = rng.uniform(0, inter_arrival)
+        while t < horizon:
+            inv.append(Invocation(t, name))
+            t += inter_arrival * (1 + jitter * (rng.random() - 0.5) * 2)
+    return Trace(inv, fns, horizon)
+
+
+def chains(rate: float, horizon: float, *, chain_len: int = 3, seed: int = 0,
+           **fn_kw) -> Trace:
+    """Sequential function chains (stage0 -> stage1 -> ...): the cascading
+    cold-start setting of Xanadu / function-fusion."""
+    rng = np.random.default_rng(seed)
+    fns = _mk_functions(chain_len, **fn_kw)
+    names = list(fns)
+    for i, n in enumerate(names[:-1]):
+        fns[n] = dataclasses.replace(fns[n], chain=(names[i + 1],))
+    t, inv = 0.0, []
+    while True:
+        t += rng.exponential(1.0 / rate)
+        if t >= horizon:
+            break
+        inv.append(Invocation(t, names[0], chain=tuple(names[1:])))
+    return Trace(inv, fns, horizon)
+
+
+def azure_like(horizon: float, *, num_functions: int = 40, seed: int = 0,
+               **fn_kw) -> Trace:
+    """Azure-functions-trace-shaped mix: log-uniform per-function rates over
+    ~4 decades, so a few functions are hot and most are cold-start-prone."""
+    rng = np.random.default_rng(seed)
+    fns = _mk_functions(num_functions, **fn_kw)
+    inv = []
+    for i, name in enumerate(fns):
+        lam = 10 ** rng.uniform(-3.2, 0.7)     # per-second rate
+        t = rng.exponential(1.0 / lam)
+        while t < horizon:
+            inv.append(Invocation(t, name))
+            t += rng.exponential(1.0 / lam)
+    return Trace(inv, fns, horizon)
+
+
+ALL_GENERATORS = {
+    "poisson": poisson,
+    "bursty": bursty,
+    "diurnal": diurnal,
+    "flash_crowd": flash_crowd,
+    "rare": rare,
+    "chains": chains,
+    "azure_like": azure_like,
+}
+
+
+def interarrival_series(trace: Trace, function: str) -> np.ndarray:
+    times = np.array([i.time for i in trace.invocations if i.function == function])
+    return np.diff(times) if len(times) > 1 else np.array([])

@@ -1,0 +1,1 @@
+"""TPU Pallas kernels + jnp reference paths (see ops.py)."""

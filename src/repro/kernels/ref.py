@@ -1,0 +1,102 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are deliberately naive (O(S^2) score materialisation, step-by-step
+scans): they are the *correctness* reference that both the memory-bounded
+jnp implementations in ``ops.py`` and the Pallas TPU kernels are tested
+against (``tests/test_kernels.py`` sweeps shapes/dtypes with
+``assert_allclose``).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _gqa_expand(k, num_q_heads):
+    """(B, S, Hkv, D) -> (B, S, Hq, D) by repeating kv heads."""
+    b, s, hkv, d = k.shape
+    rep = num_q_heads // hkv
+    return jnp.repeat(k, rep, axis=2)
+
+
+def attention_mask(q_pos, kv_pos, *, causal: bool, window: Optional[int]):
+    """(Sq, Skv) boolean mask from absolute positions."""
+    m = jnp.ones((q_pos.shape[0], kv_pos.shape[0]), bool)
+    if causal:
+        m &= kv_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        m &= kv_pos[None, :] > (q_pos[:, None] - window)
+    return m
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        window: Optional[int] = None,
+                        q_pos=None, kv_pos=None):
+    """Naive attention oracle.
+
+    q: (B, Sq, Hq, D); k, v: (B, Skv, Hkv, D) with Hq % Hkv == 0.
+    Returns (B, Sq, Hq, D) in q.dtype; softmax in fp32.
+    """
+    b, sq, hq, d = q.shape
+    skv = k.shape[1]
+    if q_pos is None:
+        q_pos = jnp.arange(sq) + (skv - sq)  # suffix alignment (prefill default)
+    if kv_pos is None:
+        kv_pos = jnp.arange(skv)
+    k = _gqa_expand(k, hq)
+    v = _gqa_expand(v, hq)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / jnp.sqrt(d).astype(jnp.float32)
+    mask = attention_mask(q_pos, kv_pos, causal=causal, window=window)
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, valid_mask):
+    """Single-token decode oracle.
+
+    q: (B, Hq, D); caches: (B, S, Hkv, D); valid_mask: (B, S) bool.
+    Returns (B, Hq, D).
+    """
+    b, hq, d = q.shape
+    k = _gqa_expand(k_cache, hq)
+    v = _gqa_expand(v_cache, hq)
+    scores = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / jnp.sqrt(d).astype(jnp.float32)
+    scores = jnp.where(valid_mask[:, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhs,bshd->bhd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def ssm_scan_ref(u, delta, A, B, C, D, h0):
+    """Mamba-1 selective-scan oracle (sequential over time, fp32 state).
+
+    u, delta: (Batch, T, Din); A: (Din, N); B, C: (Batch, T, N); D: (Din,);
+    h0: (Batch, Din, N).  Returns (y (Batch, T, Din), hT).
+    Discretisation: h_t = exp(delta_t * A) * h_{t-1} + delta_t * B_t * u_t.
+    """
+    uf = u.astype(jnp.float32)
+    df = delta.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+    Bf = B.astype(jnp.float32)
+    Cf = C.astype(jnp.float32)
+
+    def step(h, xs):
+        u_t, d_t, b_t, c_t = xs           # (Bt, Din), (Bt, Din), (Bt, N), (Bt, N)
+        decay = jnp.exp(d_t[..., None] * Af[None])          # (Bt, Din, N)
+        h = decay * h + (d_t * u_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    xs = (jnp.moveaxis(uf, 1, 0), jnp.moveaxis(df, 1, 0),
+          jnp.moveaxis(Bf, 1, 0), jnp.moveaxis(Cf, 1, 0))
+    hT, ys = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    y = jnp.moveaxis(ys, 0, 1) + uf * D.astype(jnp.float32)[None, None]
+    return y.astype(u.dtype), hT

@@ -1,0 +1,96 @@
+"""Chunked selective-scan (Mamba-1) Pallas kernel — the SSM/hybrid hot spot.
+
+TPU adaptation: the recurrence h_t = exp(Δt·A)·h_{t-1} + Δt·B_t·u_t is
+sequential in t but *independent per channel*, so the kernel tiles the
+channel dimension (``block_d``) across a parallel grid axis and streams time
+in ``chunk``-sized VMEM tiles along the innermost sequential grid axis; the
+fp32 state h (block_d, N) persists in VMEM scratch across chunk steps.
+Inside a chunk the timestep loop is a ``fori_loop`` over VPU elementwise ops
+on (block_d, N) tiles — the TPU replacement for the CUDA kernel's
+warp-parallel scan (there is no cross-lane shuffle; the lane dimension IS
+the channel tile).
+
+Layout: channel-minor (..., chunk, block_d) tiles keep the 128-wide lane
+dimension on channels, which is the natural VREG mapping.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 256
+DEFAULT_BLOCK_D = 256
+
+
+def _ssm_kernel(u_ref, dt_ref, a_ref, b_ref, c_ref, dsk_ref, h0_ref,
+                y_ref, hT_ref, h_scr, *, chunk: int, num_chunks: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = h0_ref[0].astype(jnp.float32)          # (bd, N)
+
+    u = u_ref[0].astype(jnp.float32)                        # (chunk, bd)
+    dt = dt_ref[0].astype(jnp.float32)                      # (chunk, bd)
+    a = a_ref[...].astype(jnp.float32)                      # (bd, N)
+    bmat = b_ref[0].astype(jnp.float32)                     # (chunk, N)
+    cmat = c_ref[0].astype(jnp.float32)                     # (chunk, N)
+
+    def step(t, carry):
+        h, ys = carry
+        decay = jnp.exp(dt[t][:, None] * a)                 # (bd, N)
+        h = decay * h + (dt[t] * u[t])[:, None] * bmat[t][None, :]
+        y_t = (h * cmat[t][None, :]).sum(axis=-1)           # (bd,)
+        ys = jax.lax.dynamic_update_slice(ys, y_t[None, :], (t, 0))
+        return h, ys
+
+    ys0 = jnp.zeros((chunk, u.shape[1]), jnp.float32)
+    h, ys = jax.lax.fori_loop(0, chunk, step, (h_scr[...], ys0))
+    h_scr[...] = h
+    y_ref[0] = (ys + u * dsk_ref[...][None, :]).astype(y_ref.dtype)
+
+    @pl.when(ci == num_chunks - 1)
+    def _finish():
+        hT_ref[0] = h_scr[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "block_d", "interpret"))
+def ssm_scan_pallas(u, delta, A, B, C, D, h0, *, chunk: int = DEFAULT_CHUNK,
+                    block_d: int = DEFAULT_BLOCK_D, interpret: bool = True):
+    """See ``ref.ssm_scan_ref``.  u/delta: (Bt, T, Din); B/C: (Bt, T, N)."""
+    bt, t, din = u.shape
+    n = A.shape[1]
+    ck = min(chunk, t)
+    bd = min(block_d, din)
+    assert t % ck == 0 and din % bd == 0
+    nc, nd = t // ck, din // bd
+
+    kernel = functools.partial(_ssm_kernel, chunk=ck, num_chunks=nc)
+    y, hT = pl.pallas_call(
+        kernel,
+        grid=(bt, nd, nc),
+        in_specs=[
+            pl.BlockSpec((1, ck, bd), lambda bi, di, ci: (bi, ci, di)),  # u
+            pl.BlockSpec((1, ck, bd), lambda bi, di, ci: (bi, ci, di)),  # dt
+            pl.BlockSpec((bd, n), lambda bi, di, ci: (di, 0)),           # A
+            pl.BlockSpec((1, ck, n), lambda bi, di, ci: (bi, ci, 0)),    # B
+            pl.BlockSpec((1, ck, n), lambda bi, di, ci: (bi, ci, 0)),    # C
+            pl.BlockSpec((bd,), lambda bi, di, ci: (di,)),               # D skip
+            pl.BlockSpec((1, bd, n), lambda bi, di, ci: (bi, di, 0)),    # h0
+        ],
+        out_specs=[
+            pl.BlockSpec((1, ck, bd), lambda bi, di, ci: (bi, ci, di)),
+            pl.BlockSpec((1, bd, n), lambda bi, di, ci: (bi, di, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bt, t, din), u.dtype),
+            jax.ShapeDtypeStruct((bt, din, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bd, n), jnp.float32)],
+        interpret=interpret,
+    )(u, delta, A, B, C, D, h0)
+    return y, hT

@@ -1,0 +1,188 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape) on
+the production meshes, with ShapeDtypeStruct inputs (zero allocation).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch granite-3-2b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out results.json]
+
+Emits per-pair: compile wall time, per-device bytes (memory_analysis),
+HLO flops/bytes (cost_analysis), and collective-transfer bytes parsed from
+the optimized HLO — the §Roofline inputs.
+
+NOTE: the XLA_FLAGS line above MUST run before any other import touches jax
+(device count locks on first backend init) — hence its position.
+"""
+import argparse
+import json
+import re
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding
+from repro.config import (ARCH_IDS, SHAPES, get_config, get_shape,
+                          supports_shape)
+from repro.launch import specs as S
+from repro.launch.mesh import make_production_mesh
+from repro.models import registry
+from repro.training.optimizer import OptimizerConfig, init_opt_state
+from repro.training.train_loop import make_train_step
+
+
+def _entry_and_specs(bundle, shape, rules, mesh):
+    """Returns (fn, args_specs, in_shardings)."""
+    cfg = bundle.cfg
+    ispec = registry.input_specs(cfg, shape)
+    params_spec = bundle.params_spec()
+    p_sh = S.params_shardings(params_spec, rules, mesh)
+    if shape.kind == "train":
+        opt_spec = jax.eval_shape(init_opt_state, params_spec)
+        o_sh = S.opt_state_shardings(opt_spec, p_sh, mesh)
+        b_sh = S.batch_shardings(ispec["batch"], rules, mesh)
+        fn = make_train_step(bundle, OptimizerConfig())
+        return fn, (params_spec, opt_spec, ispec["batch"]), (p_sh, o_sh, b_sh)
+    if shape.kind == "prefill":
+        b_sh = S.batch_shardings(ispec["batch"], rules, mesh)
+        return bundle.prefill, (params_spec, ispec["batch"]), (p_sh, b_sh)
+    # decode
+    c_sh = S.caches_shardings(ispec["caches"], rules, mesh)
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    t_sh = NamedSharding(mesh, P(rules.get("cache_batch")))
+    pos_sh = NamedSharding(mesh, P())
+    return (bundle.decode_step,
+            (params_spec, ispec["caches"], ispec["token"], ispec["pos"]),
+            (p_sh, c_sh, t_sh, pos_sh))
+
+
+# matches ONLY the defining line of a collective op:
+#   %x = bf16[2,4]{1,0} all-gather(%y), ...
+#   %x = (f32[8]{0}, f32[4]{0}) all-reduce(%a, %b), ...
+# async "-start" forms count once; "-done" (and consumers like
+# get-tuple-element(%all-reduce.3)) do not.
+_COLL_DEF_RE = re.compile(
+    r"=\s+(\([^)]*\)|[\w\[\],{}:#*]+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_ITEMSIZE = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+             "u8": 1, "pred": 1, "f64": 8, "s64": 8, "u64": 8, "f8e4m3fn": 1,
+             "f8e5m2": 1, "s16": 2, "u16": 2}
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum result-shape bytes of every collective op in optimized HLO."""
+    out: Dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_DEF_RE.search(line)
+        if not m:
+            continue
+        shapes, kind = m.group(1), m.group(2)
+        total = 0
+        for dt, dims in _SHAPE_RE.findall(shapes):
+            if dt not in _ITEMSIZE:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            total += n * _ITEMSIZE[dt]
+        if total:
+            out[kind] = out.get(kind, 0.0) + total
+    return out
+
+
+def run_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
+             do_compile: bool = True) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    rec: Dict[str, Any] = {"arch": arch, "shape": shape_name,
+                           "mesh": "2x16x16" if multi_pod else "16x16"}
+    if not supports_shape(cfg, shape):
+        rec["status"] = "skipped"
+        rec["reason"] = ("full-attention arch: long_500k requires "
+                         "sub-quadratic attention (DESIGN.md §3)")
+        return rec
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = sharding.make_rules(cfg, shape, mesh)
+    bundle = registry.build(cfg, shape)
+    t0 = time.perf_counter()
+    with sharding.use_rules(rules, mesh):
+        fn, args, in_sh = _entry_and_specs(bundle, shape, rules, mesh)
+        with mesh:
+            lowered = jax.jit(fn, in_shardings=in_sh).lower(*args)
+            rec["lower_s"] = round(time.perf_counter() - t0, 2)
+            if not do_compile:
+                rec["status"] = "lowered"
+                return rec
+            t1 = time.perf_counter()
+            compiled = lowered.compile()
+            rec["compile_s"] = round(time.perf_counter() - t1, 2)
+    mem = compiled.memory_analysis()
+    if mem is not None:
+        rec["bytes_per_device"] = {
+            "argument": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "peak": int(getattr(mem, "argument_size_in_bytes", 0))
+            + int(getattr(mem, "temp_size_in_bytes", 0)),
+        }
+    cost = compiled.cost_analysis()
+    if cost:
+        rec["hlo_flops"] = float(cost.get("flops", 0.0))
+        rec["hlo_bytes"] = float(cost.get("bytes accessed", 0.0))
+    txt = compiled.as_text()
+    rec["collectives"] = collective_bytes(txt)
+    rec["collective_bytes_total"] = float(sum(rec["collectives"].values()))
+    rec["num_params"] = int(cfg.param_count())
+    rec["num_params_active"] = int(cfg.param_count(active_only=True))
+    rec["status"] = "ok"
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--no-compile", action="store_true")
+    args = ap.parse_args()
+
+    pairs = []
+    archs = ARCH_IDS if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    results = []
+    for mp in meshes:
+        for a in archs:
+            for s in shapes:
+                t0 = time.perf_counter()
+                try:
+                    rec = run_pair(a, s, multi_pod=mp,
+                                   do_compile=not args.no_compile)
+                except Exception as e:  # noqa: BLE001 — report, keep going
+                    rec = {"arch": a, "shape": s,
+                           "mesh": "2x16x16" if mp else "16x16",
+                           "status": "error", "error": repr(e)[:500]}
+                rec["wall_s"] = round(time.perf_counter() - t0, 2)
+                results.append(rec)
+                print(json.dumps(rec), flush=True)
+                if args.out:
+                    with open(args.out, "w") as f:
+                        json.dump(results, f, indent=1)
+    ok = sum(1 for r in results if r["status"] == "ok")
+    sk = sum(1 for r in results if r["status"] == "skipped")
+    err = sum(1 for r in results if r["status"] == "error")
+    print(f"# dry-run: {ok} ok, {sk} skipped, {err} errors "
+          f"/ {len(results)} pairs")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,253 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Roofline analysis (deliverable g).
+
+For each (arch × shape) on the single-pod 16×16 mesh, derive the three
+roofline terms from compiled artifacts:
+
+    compute    = HLO_FLOPs / (chips × 197 TFLOP/s)
+    memory     = HLO_bytes / (chips × 819 GB/s)
+    collective = collective_bytes / (chips × 50 GB/s per ICI link)
+
+Methodology (XLA's ``cost_analysis`` counts while-loop bodies ONCE — we
+verified ``scan(f, length=8)`` reports the same FLOPs as one call):
+
+  1. **Differential unrolled lowering**: compile the model with 1×period and
+     2×period layers *unrolled* (``cfg.unroll_layers``); per-period cost =
+     f(2p) − f(1p); total = f(1p) + (n_rep − 1)·(f(2p) − f(1p)).  Exact for
+     everything layer-linear (matmuls, per-layer collectives, optimizer
+     update) and captures the non-layer parts (embedding, logits, loss)
+     exactly once.
+  2. **Analytic corrections** for *time*-recurrent inner loops, which no
+     unrolling can materialise (32k-step scans): flash-attention q/kv chunk
+     loops, Mamba selective-scan, xLSTM recurrences.  Formulas below are the
+     standard MFU accounting.
+  3. Per-device **memory** (argument/temp/peak) is taken from the main
+     scanned dry-run (dryrun_results.json) — the scanned program is the
+     deployed one.  NOTE: peak temp on the CPU host backend over-reports
+     bf16 models (XLA emulates bf16 in f32 and keeps f32 copies of saved
+     loop carries — measured +20 GB/device phantom on granite train_4k);
+     EXPERIMENTS.md reports both raw and TPU-corrected numbers.
+
+cost_analysis values are per-device (the SPMD-partitioned module), so terms
+divide by link/HBM/FLOP rates directly; MODEL_FLOPS is global and divides
+by 256 chips.
+"""
+import argparse
+import dataclasses
+import json
+import time
+from typing import Any, Dict, Optional
+
+import jax
+
+from repro import sharding
+from repro.config import (ARCH_IDS, SHAPES, get_config, get_shape,
+                          supports_shape)
+from repro.launch.dryrun import _entry_and_specs, collective_bytes
+from repro.launch.mesh import make_production_mesh
+from repro.models import registry, transformer
+
+PEAK_FLOPS = 197e12          # bf16 / chip (TPU v5e)
+HBM_BW = 819e9               # B/s / chip
+LINK_BW = 50e9               # B/s / ICI link
+CHIPS = 256
+
+
+# --------------------------------------------------------------------------- #
+# analytic corrections for time-recurrent inner loops
+# --------------------------------------------------------------------------- #
+
+
+def _train_mult(kind: str) -> float:
+    return 3.0 if kind == "train" else 1.0
+
+
+def analytic_loop_costs(cfg, shape) -> Dict[str, float]:
+    """Global FLOPs/bytes of inner time loops (counted once by HLO)."""
+    b, s = shape.global_batch, shape.seq_len
+    window = registry.resolve_window(cfg, shape)
+    m = _train_mult(shape.kind)
+    itemsize = 2 if cfg.dtype == "bfloat16" else 4
+    flops = 0.0
+    nbytes = 0.0
+    if shape.kind == "decode":
+        return {"flops": 0.0, "bytes": 0.0}   # decode has no inner time loops
+    pat = cfg.layer_pattern
+    for kind in pat:
+        if kind == "A":
+            skv = min(window, s) if window else s
+            causal = 0.5 if (window is None) else 1.0
+            f = 4.0 * b * cfg.num_heads * cfg.head_dim * s * skv * causal
+            flops += f * m
+            nq = max(1, s // 1024)
+            nbytes += m * b * (nq * skv * 2 * cfg.kv_dim
+                               + 2 * s * cfg.q_dim) * itemsize
+        elif kind == "M":
+            ssm = cfg.ssm
+            d_in = ssm.expand * cfg.d_model
+            flops += m * 9.0 * b * s * d_in * ssm.d_state
+            nbytes += m * 2.0 * b * s * (2 * d_in + 2 * ssm.d_state) * 4
+        elif kind in ("L", "S"):
+            x = cfg.xlstm
+            d_in = int(x.proj_factor * cfg.d_model)
+            dh = d_in // x.num_heads
+            flops += m * 10.0 * b * s * d_in * dh
+            nbytes += m * 2.0 * b * s * 2 * d_in * 4
+    if cfg.encoder is not None:
+        e = cfg.encoder
+        f_frames = e.num_frames
+        # encoder self-attn (non-causal) + decoder cross-attn loops
+        flops += m * (4.0 * b * e.num_heads * (e.d_model // e.num_heads)
+                      * f_frames * f_frames) * e.num_layers
+        flops += m * (4.0 * b * cfg.num_heads * cfg.head_dim * s * f_frames
+                      ) * cfg.num_layers
+    return {"flops": flops, "bytes": nbytes}
+
+
+def model_flops(cfg, shape) -> float:
+    """6·N·D (train) / 2·N·D (inference), N = active params (MoE)."""
+    n = cfg.param_count(active_only=True)
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch          # one decoded token
+
+
+# --------------------------------------------------------------------------- #
+# differential unrolled measurement
+# --------------------------------------------------------------------------- #
+
+
+def _scaled_cfg(cfg, mult: int):
+    per = transformer.period_len(cfg)
+    kw: Dict[str, Any] = {"num_layers": per * mult, "unroll_layers": True,
+                          "remat": False,
+                          "full_param_count": cfg.param_count()}
+    if cfg.encoder is not None:
+        kw["encoder"] = dataclasses.replace(cfg.encoder, num_layers=mult)
+    return dataclasses.replace(cfg, **kw)
+
+
+def _measure(cfg, shape, mesh) -> Dict[str, float]:
+    rules = sharding.make_rules(cfg, shape, mesh)
+    bundle = registry.build(cfg, shape)
+    with sharding.use_rules(rules, mesh):
+        fn, args, in_sh = _entry_and_specs(bundle, shape, rules, mesh)
+        with mesh:
+            compiled = jax.jit(fn, in_shardings=in_sh).lower(*args).compile()
+    cost = compiled.cost_analysis() or {}
+    colls = collective_bytes(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll": float(sum(colls.values())),
+        "colls": colls,
+    }
+
+
+def analyze_pair(arch: str, shape_name: str, *, dryrun_mem: Optional[dict] = None
+                 ) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    rec: Dict[str, Any] = {"arch": arch, "shape": shape_name, "mesh": "16x16"}
+    if not supports_shape(cfg, shape):
+        rec["status"] = "skipped"
+        return rec
+    mesh = make_production_mesh(multi_pod=False)
+    per = transformer.period_len(cfg)
+    n_rep = cfg.num_layers // per
+    t0 = time.perf_counter()
+    f1 = _measure(_scaled_cfg(cfg, 1), shape, mesh)
+    f2 = _measure(_scaled_cfg(cfg, 2), shape, mesh)
+    rec["measure_s"] = round(time.perf_counter() - t0, 1)
+
+    per_dev: Dict[str, float] = {}
+    for k in ("flops", "bytes", "coll"):
+        per_layer = max(f2[k] - f1[k], 0.0)
+        per_dev[k] = f1[k] + (n_rep - 1) * per_layer
+    corr = analytic_loop_costs(cfg, shape)
+    per_dev["flops"] += corr["flops"] / CHIPS
+    per_dev["bytes"] += corr["bytes"] / CHIPS
+
+    compute_s = per_dev["flops"] / PEAK_FLOPS
+    memory_s = per_dev["bytes"] / HBM_BW
+    coll_s = per_dev["coll"] / LINK_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": coll_s}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    useful = mf / CHIPS / max(per_dev["flops"], 1.0)
+    bound_time = max(terms.values())
+    mfu_bound = (mf / CHIPS / PEAK_FLOPS) / max(bound_time, 1e-12)
+
+    rec.update({
+        "status": "ok",
+        "flops_per_device": per_dev["flops"],
+        "bytes_per_device": per_dev["bytes"],
+        "collective_bytes_per_device": per_dev["coll"],
+        "analytic_loop_flops_global": corr["flops"],
+        **{k: round(v, 6) for k, v in terms.items()},
+        "dominant": dominant.replace("_s", ""),
+        "model_flops_global": mf,
+        "useful_flops_ratio": round(useful, 4),
+        "mfu_upper_bound": round(mfu_bound, 4),
+        "suggestion": _suggest(dominant, useful, cfg, shape),
+    })
+    if dryrun_mem:
+        rec["mem_per_device"] = dryrun_mem
+    return rec
+
+
+def _suggest(dominant: str, useful: float, cfg, shape) -> str:
+    if dominant == "collective_s":
+        if cfg.moe is not None:
+            return ("collective-bound: overlap expert all-to-all with dense "
+                    "compute / shard groups to cut dispatch resharding")
+        return ("collective-bound: reduce FSDP all-gather volume (larger "
+                "per-device shards or weight-stationary TP)")
+    if dominant == "memory_s":
+        if shape.kind == "decode":
+            return ("HBM-bound (expected for decode): raise batch, quantize "
+                    "KV cache, or use the ring/window cache")
+        return "HBM-bound: fuse elementwise chains; increase arithmetic intensity"
+    if useful < 0.5:
+        return ("compute-bound but <50% useful FLOPs: cut remat recompute or "
+                "MoE over-capacity compute")
+    return "compute-bound with good useful-FLOPs ratio: near roofline"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--out", default="roofline_results.json")
+    args = ap.parse_args()
+    try:
+        with open("dryrun_results.json") as f:
+            dmem = {(r["arch"], r["shape"]): r.get("bytes_per_device")
+                    for r in json.load(f) if r.get("mesh") == "16x16"}
+    except FileNotFoundError:
+        dmem = {}
+    archs = [args.arch] if args.arch else list(ARCH_IDS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    results = []
+    for a in archs:
+        for s in shapes:
+            try:
+                rec = analyze_pair(a, s, dryrun_mem=dmem.get((a, s)))
+            except Exception as e:  # noqa: BLE001
+                rec = {"arch": a, "shape": s, "status": "error",
+                       "error": repr(e)[:400]}
+            results.append(rec)
+            print(json.dumps(rec), flush=True)
+            with open(args.out, "w") as f:
+                json.dump(results, f, indent=1)
+    ok = [r for r in results if r["status"] == "ok"]
+    print(f"# roofline: {len(ok)} ok / {len(results)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Training entrypoint.
+
+    PYTHONPATH=src python -m repro.launch.train --arch granite-3-2b \
+        --smoke --steps 200 --batch 8 --seq 256 --checkpoint out.npz
+
+Full (non-smoke) configs are meant for the production mesh; on this CPU
+container use ``--smoke`` (the reduced per-family variant).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.config import InputShape, get_config, reduced
+from repro.data import pipeline
+from repro.models import registry
+from repro.training import checkpoint
+from repro.training.optimizer import OptimizerConfig
+from repro.training.train_loop import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=2)
+    ap.add_argument("--checkpoint", default=None)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = reduced(cfg, layers=args.layers, d_model=args.d_model)
+    shape = InputShape("cli", args.seq, args.batch, "train")
+    bundle = registry.build(cfg, max_seq=args.seq)
+    data = pipeline.batches(cfg, shape)
+    res = train(bundle, data, steps=args.steps,
+                opt_cfg=OptimizerConfig(lr=args.lr, warmup_steps=args.steps // 10,
+                                        total_steps=args.steps))
+    print(f"done: loss {res.losses[0]:.4f} -> {res.losses[-1]:.4f} "
+          f"({res.tokens_per_s:.0f} tok/s)")
+    if args.checkpoint:
+        n = checkpoint.save(args.checkpoint, res.final_params,
+                            extra={"arch": args.arch, "steps": args.steps})
+        print(f"checkpoint: {args.checkpoint} ({n / 2**20:.1f} MB)")
+
+
+if __name__ == "__main__":
+    main()

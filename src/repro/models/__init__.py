@@ -1,0 +1,1 @@
+"""Functional model zoo (pure pytrees, scan-stacked layers)."""

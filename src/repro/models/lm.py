@@ -1,0 +1,137 @@
+"""Decoder-only language model (dense / MoE / hybrid / SSM / VLM backbones)."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding
+from repro.models import layers, transformer
+
+
+def init_lm(rng, cfg, *, max_seq: int):
+    r = jax.random.split(rng, 4)
+    p: Dict[str, Any] = {
+        "embed": layers.embed_init(r[0], cfg.vocab_size, cfg.d_model, cfg.param_dtype),
+        "blocks": transformer.init_stack(r[1], cfg),
+        "norm_f": layers.norm_init(cfg.d_model, cfg.norm, cfg.param_dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = layers.dense_init(r[2], cfg.d_model, cfg.vocab_size,
+                                         cfg.param_dtype)
+    if cfg.vision is not None:
+        # projector stub: patch embeddings arrive at LM width already; a single
+        # linear keeps the interface of a real MLP projector.
+        p["proj"] = layers.dense_init(r[3], cfg.vision.d_embed, cfg.d_model,
+                                      cfg.param_dtype)
+    return p
+
+
+def _embed_tokens(p, cfg, tokens):
+    x = jnp.take(p["embed"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    if cfg.norm == "rmsnorm":
+        pass
+    return x
+
+
+def _inputs_to_x(p, cfg, batch):
+    """tokens (+ optional image embeds prepended) -> (B, S, d)."""
+    x = _embed_tokens(p, cfg, batch["tokens"])
+    if cfg.vision is not None and "image_embeds" in batch:
+        img = batch["image_embeds"].astype(x.dtype) @ p["proj"]
+        x = jnp.concatenate([img, x[:, : x.shape[1] - img.shape[1], :]], axis=1)
+    return sharding.logical(x, ("batch", "seq", "embed"))
+
+
+def _unembed(p, cfg, x):
+    w = p["embed"].T if cfg.tie_embeddings else p["unembed"]
+    logits = x.astype(jnp.float32) @ w.astype(jnp.float32)
+    return sharding.logical(logits, ("batch", None, "vocab"))
+
+
+def lm_forward(p, cfg, batch, *, window=None, train=False):
+    """Full-sequence forward: returns (logits, aux, caches)."""
+    x = _inputs_to_x(p, cfg, batch)
+    s = x.shape[1]
+    q_pos = jnp.arange(s)
+    x, aux, caches = transformer.stack_full(p["blocks"], x, cfg, q_pos=q_pos,
+                                            window=window, train=train)
+    x = layers.norm_apply(p["norm_f"], x, cfg.norm)
+    return _unembed(p, cfg, x), aux, caches
+
+
+def lm_loss(p, cfg, batch, *, window=None):
+    """Causal LM loss.  labels == -1 are masked out."""
+    logits, aux, _ = lm_forward(p, cfg, batch, window=window, train=True)
+    labels = batch["labels"]
+    if cfg.vision is not None and "image_embeds" in batch:
+        # image positions carry no LM loss
+        n_img = batch["image_embeds"].shape[1]
+        labels = jnp.concatenate(
+            [jnp.full((labels.shape[0], n_img), -1, labels.dtype),
+             labels[:, : labels.shape[1] - n_img]], axis=1)
+    mask = labels >= 0
+    labels_c = jnp.maximum(labels, 0)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels_c[..., None], axis=-1)[..., 0]
+    denom = jnp.maximum(mask.sum(), 1)
+    loss = jnp.where(mask, nll, 0.0).sum() / denom
+    # z-loss for logit drift (MaxText default)
+    zl = 1e-4 * jnp.where(mask, jax.nn.logsumexp(logits, -1) ** 2, 0.0).sum() / denom
+    total = loss + zl + aux
+    return total, {"loss": loss, "aux": aux, "zloss": zl,
+                   "tokens": denom.astype(jnp.float32)}
+
+
+def lm_prefill(p, cfg, batch, *, max_seq: int, window=None):
+    """Prefill: returns (last-token logits, decode caches, next position)."""
+    logits, _, raw = lm_forward(p, cfg, batch, window=window, train=False)
+    s = batch["tokens"].shape[1] if cfg.vision is None else logits.shape[1]
+    caches = _format_caches(cfg, raw, seq_len=logits.shape[1], max_seq=max_seq,
+                            window=window)
+    return logits[:, -1, :], caches, logits.shape[1]
+
+
+def _format_caches(cfg, raw_caches, *, seq_len: int, max_seq: int, window):
+    """Pack stack_full cache material into fixed decode cache layout."""
+    metas = transformer._block_meta(cfg)
+    out = []
+    for meta, c in zip(metas, raw_caches):
+        if meta["kind"] != "A":
+            out.append(c)  # recurrent states are already decode-ready
+            continue
+        k, v = c["k"], c["v"]                  # (n_rep, B, S, hkv, hd)
+        s_cache = min(window, max_seq) if window else max_seq
+        if window and s_cache <= window:
+            w = s_cache
+            if seq_len < w:
+                pad = w - seq_len
+                keep_k = jnp.pad(k[:, :, :seq_len],
+                                 ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+                keep_v = jnp.pad(v[:, :, :seq_len],
+                                 ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+            else:
+                # ring layout: absolute position p lives in slot p % w; the
+                # kept suffix starts at `start`, so roll right by start % w.
+                start = seq_len - w
+                keep_k = jnp.roll(k[:, :, -w:], start % w, axis=2)
+                keep_v = jnp.roll(v[:, :, -w:], start % w, axis=2)
+            out.append({"k": keep_k, "v": keep_v})
+        else:
+            pad = s_cache - seq_len
+            out.append({
+                "k": jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))),
+                "v": jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))),
+            })
+    return out
+
+
+def lm_decode_step(p, cfg, caches, token, pos, *, window=None):
+    """token: (B,) int32; pos: scalar int32.  Returns (logits (B, V), caches)."""
+    x = jnp.take(p["embed"], token, axis=0).astype(jnp.dtype(cfg.dtype))
+    x, caches = transformer.stack_decode(p["blocks"], x, cfg, pos=pos,
+                                         window=window, caches=caches)
+    x = layers.norm_apply(p["norm_f"], x, cfg.norm)
+    logits = _unembed(p, cfg, x[:, None, :])[:, 0, :]
+    return logits, caches

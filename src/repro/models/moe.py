@@ -1,0 +1,260 @@
+"""Mixture-of-Experts FFN: top-k routing, sort-based capacity dispatch.
+
+Design (see DESIGN.md §4): tokens are reshaped into groups of <= ``GROUP``
+tokens; within each group a sort-based dispatch packs tokens into a
+``(experts, capacity, d_model)`` buffer (no GShard one-hot — the (t, E, C)
+one-hot is quadratically larger and does not fit at 32k sequence lengths).
+The buffer's expert dim carries the ``expert`` logical axis, so under the
+production mesh expert compute is expert-parallel over the ``model`` axis
+while groups shard over ``data`` — the classic EP layout, expressed in
+GSPMD.  Capacity overflows drop (Switch-style), bounded by
+``capacity_factor``.
+
+Supports Arctic's dense-residual branch (dense FFN parallel to the routed
+experts, summed) and returns the load-balance auxiliary loss.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding
+from repro.models import layers
+
+GROUP = 4096  # max tokens per dispatch group
+
+
+def init_moe(rng, cfg):
+    m = cfg.moe
+    d = cfg.d_model
+    pdt = cfg.param_dtype
+    r = jax.random.split(rng, 5)
+    ff = m.expert_ff
+    e = m.num_experts
+
+    def expert_stack(key, a, b):
+        w = jax.random.truncated_normal(key, -2.0, 2.0, (e, a, b), jnp.float32)
+        return (w * (a ** -0.5)).astype(pdt)
+
+    p = {
+        "router": layers.dense_init(r[0], d, e, "float32"),  # router in fp32
+        "wi": expert_stack(r[1], d, ff),
+        "wo": expert_stack(r[2], ff, d),
+    }
+    if cfg.act == "swiglu":
+        p["wg"] = expert_stack(r[3], d, ff)
+    if m.dense_residual:
+        p["dense"] = layers.mlp_init(r[4], d, m.dense_residual_ff or cfg.d_ff,
+                                     cfg.act, pdt)
+    return p
+
+
+def _capacity(tokens_per_group: int, m) -> int:
+    c = int(tokens_per_group * m.top_k * m.capacity_factor / m.num_experts)
+    return max(m.top_k, min(c, tokens_per_group))
+
+
+def _dispatch_group(x, p, cfg):
+    """x: (t, d) one token group -> (y (t, d), aux_loss scalar)."""
+    m = cfg.moe
+    t, d = x.shape
+    e, k = m.num_experts, m.top_k
+    cap = _capacity(t, m)
+
+    logits = (x.astype(jnp.float32) @ p["router"]).astype(jnp.float32)  # (t, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, k)                 # (t, k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = top_i.reshape(t * k)
+    order = jnp.argsort(flat_e)                            # stable
+    sorted_e = flat_e[order]
+    counts = jnp.bincount(flat_e, length=e)                # (E,)
+    offsets = jnp.cumsum(counts) - counts                  # exclusive
+    pos_in_e = jnp.arange(t * k) - offsets[sorted_e]
+    keep = pos_in_e < cap
+    slot = jnp.where(keep, sorted_e * cap + pos_in_e, e * cap)
+    tok_idx = order // k
+
+    buf = jnp.zeros((e * cap + 1, d), x.dtype).at[slot].set(x[tok_idx])
+    buf = buf[: e * cap].reshape(e, cap, d)
+    buf = sharding.logical(buf, ("expert", None, None))
+
+    h = jnp.einsum("ecd,edf->ecf", buf, p["wi"])
+    if "wg" in p:
+        h = jax.nn.silu(h) * jnp.einsum("ecd,edf->ecf", buf, p["wg"])
+    else:
+        h = jax.nn.gelu(h)
+    out = jnp.einsum("ecf,efd->ecd", h, p["wo"])
+    out = sharding.logical(out, ("expert", None, None))
+
+    out_flat = jnp.concatenate(
+        [out.reshape(e * cap, d), jnp.zeros((1, d), out.dtype)], axis=0)
+    y_sorted = out_flat[slot]                              # (t*k, d)
+    w_sorted = (top_w.reshape(t * k)[order] * keep).astype(jnp.float32)
+    y = jnp.zeros((t, d), jnp.float32).at[tok_idx].add(
+        y_sorted.astype(jnp.float32) * w_sorted[:, None])
+
+    # load-balance aux loss (Switch): E * sum_e f_e * p_e
+    f = counts.astype(jnp.float32) / (t * k)
+    pbar = probs.mean(axis=0)
+    aux = e * jnp.sum(f * pbar)
+    return y.astype(x.dtype), aux
+
+
+def _dispatch_group_local(x, p_local, cfg, *, rank, e_local):
+    """Expert-parallel local dispatch: this shard owns experts
+    [rank*e_local, (rank+1)*e_local).  Routing is computed over ALL experts
+    (router weights are replicated, x is replicated over the model axis so
+    every rank computes identical routing); only locally-owned assignments
+    are dispatched; the cross-rank combine is the caller's psum.
+    """
+    m = cfg.moe
+    t, d = x.shape
+    e, k = m.num_experts, m.top_k
+    cap = _capacity(t, m)
+
+    logits = (x.astype(jnp.float32) @ p_local["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = top_i.reshape(t * k)
+    flat_w = top_w.reshape(t * k)
+    owned = (flat_e >= rank * e_local) & (flat_e < (rank + 1) * e_local)
+    local_e = jnp.where(owned, flat_e - rank * e_local, e_local)  # sentinel
+    order = jnp.argsort(local_e)
+    sorted_e = local_e[order]
+    counts = jnp.bincount(local_e, length=e_local + 1)
+    offsets = jnp.cumsum(counts) - counts
+    pos_in_e = jnp.arange(t * k) - offsets[sorted_e]
+    keep = (pos_in_e < cap) & (sorted_e < e_local)
+    slot = jnp.where(keep, sorted_e * cap + pos_in_e, e_local * cap)
+    tok_idx = order // k
+
+    buf = jnp.zeros((e_local * cap + 1, d), x.dtype).at[slot].set(x[tok_idx])
+    buf = buf[: e_local * cap].reshape(e_local, cap, d)
+    h = jnp.einsum("ecd,edf->ecf", buf, p_local["wi"])
+    if "wg" in p_local:
+        h = jax.nn.silu(h) * jnp.einsum("ecd,edf->ecf", buf, p_local["wg"])
+    else:
+        h = jax.nn.gelu(h)
+    out = jnp.einsum("ecf,efd->ecd", h, p_local["wo"])
+    out_flat = jnp.concatenate(
+        [out.reshape(e_local * cap, d), jnp.zeros((1, d), out.dtype)], axis=0)
+    y_sorted = out_flat[slot]
+    w_sorted = (flat_w[order] * keep).astype(jnp.float32)
+    y = jnp.zeros((t, d), jnp.float32).at[tok_idx].add(
+        y_sorted.astype(jnp.float32) * w_sorted[:, None])
+
+    # aux loss: identical on every rank (global routing stats) -> replicated
+    f = jnp.bincount(flat_e, length=e).astype(jnp.float32) / (t * k)
+    aux = e * jnp.sum(f * probs.mean(axis=0))
+    return y.astype(x.dtype), aux
+
+
+def _moe_ffn_ep(p, x, cfg, rules, mesh) -> Tuple[jax.Array, jax.Array]:
+    """Explicit expert-parallel MoE via shard_map (EXPERIMENTS.md §Perf
+    iteration 2): GSPMD replicates the sort-based dispatch (≈26 GB/layer of
+    collectives on qwen3-moe prefill); manual EP needs only the combine
+    all-reduce of the token activations (≈0.27 GB/layer)."""
+    from jax.sharding import PartitionSpec as P
+
+    def _axsize(ax):
+        if ax is None:
+            return 1
+        names = (ax,) if isinstance(ax, str) else ax
+        n = 1
+        for a in names:
+            n *= mesh.shape[a]
+        return n
+
+    model_ax = rules["expert"]
+    # shard_map needs even division: drop token axes that don't divide
+    # (decode steps have seq==1; long_500k has batch==1)
+    batch_ax = rules.get("batch")
+    seq_ax = rules.get("seq")
+    if x.shape[0] % _axsize(batch_ax):
+        batch_ax = None
+    if x.shape[1] % _axsize(seq_ax):
+        seq_ax = None
+    msize = mesh.shape[model_ax] if isinstance(model_ax, str) else 1
+    m = cfg.moe
+    e_local = m.num_experts // msize
+
+    moe_parts = {k: p[k] for k in ("router", "wi", "wg", "wo") if k in p}
+    spec_parts = {k: (P(None, None) if k == "router" else P(model_ax, None, None))
+                  for k in moe_parts}
+    dense = p.get("dense")
+    dense_spec = None
+    if dense is not None:
+        ff_ax = rules.get("ff")
+        dense_spec = {k: (P(None, ff_ax) if k in ("wi", "wg") else P(ff_ax, None))
+                      for k in dense}
+
+    def local_fn(parts, dense_local, xl):
+        rank = jax.lax.axis_index(model_ax) if msize > 1 else 0
+        b, s, d = xl.shape
+        t = b * s
+        gs = min(GROUP, t)
+        g = t // gs if t % gs == 0 else 1
+        gs = t // g
+        xg = xl.reshape(g, gs, d)
+        y, aux = jax.vmap(lambda xx: _dispatch_group_local(
+            xx, parts, cfg, rank=rank, e_local=e_local))(xg)
+        y = y.reshape(b, s, d).astype(jnp.float32)
+        if dense_local is not None:
+            # dense residual branch: ff dim sharded on the same axis; its
+            # partial sums ride the same combine all-reduce
+            h = xl @ dense_local["wi"]
+            if "wg" in dense_local:
+                h = jax.nn.silu(h) * (xl @ dense_local["wg"])
+            else:
+                h = jax.nn.gelu(h)
+            y = y + (h @ dense_local["wo"]).astype(jnp.float32)
+        y = jax.lax.psum(y, model_ax)
+        return y.astype(xl.dtype), aux.mean()
+
+    in_specs = (spec_parts, dense_spec, P(batch_ax, seq_ax, None))
+    out_specs = (P(batch_ax, seq_ax, None), P())
+    try:
+        sm = jax.shard_map(local_fn, mesh=mesh, in_specs=in_specs,
+                           out_specs=out_specs, check_vma=False)
+    except TypeError:
+        from jax.experimental.shard_map import shard_map as _shard_map
+        sm = _shard_map(local_fn, mesh=mesh, in_specs=in_specs,
+                        out_specs=out_specs, check_rep=False)
+    y, aux = sm(moe_parts, dense, x)
+    return y, cfg.moe.router_aux_weight * aux
+
+
+def moe_ffn(p, x, cfg) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (y (B, S, d), aux_loss scalar).
+
+    Uses the explicit shard_map expert-parallel path whenever an active
+    sharding context maps experts to a mesh axis; otherwise the pure-GSPMD
+    single-device path (CPU smoke tests, unsharded serving engines).
+    """
+    ctx = sharding.current_rules_and_mesh()
+    if ctx is not None:
+        rules, mesh = ctx
+        # EP shard_map wins for big token counts (prefill/train: 10x on
+        # qwen3 prefill) but REGRESSES for decode-sized batches (arctic
+        # decode bound 0.07s -> 0.6s: the replicated local dispatch out-
+        # weighs GSPMD's resharding at ~128 tokens) — measured, §Perf iter 2b.
+        if rules.get("expert") and x.shape[0] * x.shape[1] >= 2048:
+            return _moe_ffn_ep(p, x, cfg, rules, mesh)
+    b, s, d = x.shape
+    t = b * s
+    gs = min(GROUP, t)
+    g = t // gs
+    xg = x.reshape(g, gs, d) if g * gs == t else x.reshape(1, t, d)
+    xg = sharding.logical(xg, ("moe_group", None, None))
+    y, aux = jax.vmap(lambda xx: _dispatch_group(xx, p, cfg))(xg)
+    y = y.reshape(b, s, d)
+    out = y
+    if "dense" in p:
+        out = out + layers.mlp_apply(p["dense"], x, cfg.act)
+    return out, cfg.moe.router_aux_weight * aux.mean()

@@ -1,0 +1,220 @@
+"""xLSTM blocks: mLSTM (matrix memory, 'L') and sLSTM (scalar memory, 'S').
+
+Follows arXiv:2405.04517 with exponential gating + stabilizer state m.
+Both are recurrent; full-sequence paths run a (chunked) ``lax.scan`` over
+time, decode is a single step.  Decode state is O(1) in sequence length —
+xlstm-125m is a ``long_500k``-capable arch.
+
+Shapes:  d_in = proj_factor * d_model, split into H heads of dh = d_in / H.
+mLSTM state: C (B, H, dh, dh), n (B, H, dh), m (B, H).
+sLSTM state: c, n, h (B, H, dh), m (B, H, dh) (per-cell stabilizer).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+def _dims(cfg):
+    x = cfg.xlstm
+    d_in = int(x.proj_factor * cfg.d_model)
+    h = x.num_heads
+    assert d_in % h == 0
+    return d_in, h, d_in // h
+
+
+# --------------------------------------------------------------------------- #
+# mLSTM
+# --------------------------------------------------------------------------- #
+
+
+def init_mlstm(rng, cfg):
+    d = cfg.d_model
+    d_in, h, dh = _dims(cfg)
+    pdt = cfg.param_dtype
+    r = jax.random.split(rng, 8)
+    return {
+        "up": layers.dense_init(r[0], d, 2 * d_in, pdt),          # x, z
+        "wq": layers.dense_init(r[1], d_in, d_in, pdt),
+        "wk": layers.dense_init(r[2], d_in, d_in, pdt),
+        "wv": layers.dense_init(r[3], d_in, d_in, pdt),
+        "w_i": layers.dense_init(r[4], d_in, h, "float32"),
+        "b_i": jnp.zeros((h,), jnp.float32),
+        "w_f": layers.dense_init(r[5], d_in, h, "float32"),
+        "b_f": jnp.full((h,), 3.0, jnp.float32),                  # open forget gate
+        "down": layers.dense_init(r[6], d_in, d, pdt, scale=d_in ** -0.5),
+        "skip": jnp.ones((d_in,), pdt),
+    }
+
+
+def _mlstm_gates(p, xs):
+    """xs: (..., d_in) -> log-input-gate, log-forget-gate (..., H) in fp32."""
+    xf = xs.astype(jnp.float32)
+    log_i = xf @ p["w_i"] + p["b_i"]                         # pre-act ĩ
+    log_f = jax.nn.log_sigmoid(xf @ p["w_f"] + p["b_f"])     # log σ(f̃)
+    return log_i, log_f
+
+
+def _mlstm_qkv(p, xs, h, dh):
+    q = (xs @ p["wq"]).reshape(*xs.shape[:-1], h, dh)
+    k = (xs @ p["wk"]).reshape(*xs.shape[:-1], h, dh) * (dh ** -0.5)
+    v = (xs @ p["wv"]).reshape(*xs.shape[:-1], h, dh)
+    return q, k, v
+
+
+def _mlstm_step(p, carry, q, k, v, log_i, log_f):
+    """Stabilized mLSTM recurrence, one timestep. All fp32."""
+    C, n, m = carry                                          # (B,H,dh,dh),(B,H,dh),(B,H)
+    m_new = jnp.maximum(log_f + m, log_i)
+    i_t = jnp.exp(log_i - m_new)                             # (B, H)
+    f_t = jnp.exp(log_f + m - m_new)
+    C = f_t[..., None, None] * C + i_t[..., None, None] * (
+        v[..., :, None] * k[..., None, :])                   # v k^T
+    n = f_t[..., None] * n + i_t[..., None] * k
+    num = jnp.einsum("bhij,bhj->bhi", C, q)                  # read with q over k-dim
+    den = jnp.abs(jnp.einsum("bhj,bhj->bh", n, q))
+    h_t = num / jnp.maximum(den, jnp.exp(-m_new))[..., None]
+    return (C, n, m_new), h_t
+
+
+def mlstm_forward(p, x, cfg, *, state=None):
+    """x: (B, T, d) -> (y (B, T, d), state)."""
+    d_in, h, dh = _dims(cfg)
+    b, t, _ = x.shape
+    xz = x @ p["up"]
+    xs, z = jnp.split(xz, 2, axis=-1)
+    q, k, v = _mlstm_qkv(p, xs, h, dh)
+    log_i, log_f = _mlstm_gates(p, xs)
+    if state is None:
+        state = init_mlstm_state(cfg, b)
+    carry = (state["C"], state["n"], state["m"])
+
+    def step(c, inp):
+        qt, kt, vt, li, lf = inp
+        c, h_t = _mlstm_step(p, c, qt.astype(jnp.float32), kt.astype(jnp.float32),
+                             vt.astype(jnp.float32), li, lf)
+        return c, h_t
+
+    tm = lambda a: jnp.moveaxis(a, 1, 0)
+    carry, hs = jax.lax.scan(step, carry, (tm(q), tm(k), tm(v), tm(log_i), tm(log_f)))
+    hs = jnp.moveaxis(hs, 0, 1).reshape(b, t, d_in).astype(x.dtype)
+    y = (hs + xs * p["skip"][None, None]) * jax.nn.silu(z)
+    out = y @ p["down"]
+    C, n, m = carry
+    return out, {"C": C, "n": n, "m": m}
+
+
+def init_mlstm_state(cfg, batch: int):
+    _, h, dh = _dims(cfg)
+    return {"C": jnp.zeros((batch, h, dh, dh), jnp.float32),
+            "n": jnp.zeros((batch, h, dh), jnp.float32),
+            "m": jnp.full((batch, h), -1e30, jnp.float32)}
+
+
+def mlstm_step(p, x, state, cfg):
+    """One decode step. x: (B, d)."""
+    d_in, h, dh = _dims(cfg)
+    xz = x @ p["up"]
+    xs, z = jnp.split(xz, 2, axis=-1)
+    q, k, v = _mlstm_qkv(p, xs, h, dh)
+    log_i, log_f = _mlstm_gates(p, xs)
+    carry = (state["C"], state["n"], state["m"])
+    carry, h_t = _mlstm_step(p, carry, q.astype(jnp.float32), k.astype(jnp.float32),
+                             v.astype(jnp.float32), log_i, log_f)
+    h_t = h_t.reshape(x.shape[0], d_in).astype(x.dtype)
+    y = (h_t + xs * p["skip"][None]) * jax.nn.silu(z)
+    C, n, m = carry
+    return y @ p["down"], {"C": C, "n": n, "m": m}
+
+
+# --------------------------------------------------------------------------- #
+# sLSTM
+# --------------------------------------------------------------------------- #
+
+
+def init_slstm(rng, cfg):
+    d = cfg.d_model
+    d_in, h, dh = _dims(cfg)
+    pdt = cfg.param_dtype
+    r = jax.random.split(rng, 8)
+    # gates take x (d_in) and recurrent h via per-head block-diagonal weights
+    def gate(key, bias=0.0):
+        return {"wx": layers.dense_init(key, d_in, d_in, "float32"),
+                "wh": (jax.random.normal(jax.random.fold_in(key, 1),
+                                         (h, dh, dh), jnp.float32) * dh ** -0.5),
+                "b": jnp.full((d_in,), bias, jnp.float32)}
+    return {
+        "up": layers.dense_init(r[0], d, 2 * d_in, pdt),
+        "gi": gate(r[1]),
+        "gf": gate(r[2], bias=3.0),
+        "gz": gate(r[3]),
+        "go": gate(r[4]),
+        "down": layers.dense_init(r[5], d_in, d, pdt, scale=d_in ** -0.5),
+    }
+
+
+def _slstm_step(p, carry, x_t, h_heads):
+    """x_t: (B, d_in) fp32; h_heads: (B, H, dh) previous hidden."""
+    c, n, m = carry
+
+    def g(gp):
+        rec = jnp.einsum("bhd,hde->bhe", h_heads, gp["wh"])
+        return x_t @ gp["wx"] + rec.reshape(x_t.shape[0], -1) + gp["b"]
+
+    i_pre, f_pre = g(p["gi"]), g(p["gf"])
+    z_t = jnp.tanh(g(p["gz"]))
+    o_t = jax.nn.sigmoid(g(p["go"]))
+    log_f = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(log_f + m, i_pre)
+    i_t = jnp.exp(i_pre - m_new)
+    f_t = jnp.exp(log_f + m - m_new)
+    c = f_t * c + i_t * z_t
+    n = f_t * n + i_t
+    h_t = o_t * c / jnp.maximum(n, 1e-6)
+    return (c, n, m_new), h_t
+
+
+def slstm_forward(p, x, cfg, *, state=None):
+    d_in, h, dh = _dims(cfg)
+    b, t, _ = x.shape
+    xz = x @ p["up"]
+    xs, z = jnp.split(xz, 2, axis=-1)
+    if state is None:
+        state = init_slstm_state(cfg, b)
+    carry = (state["c"], state["n"], state["m"])
+    h_prev = state["h"]
+
+    def step(cc, x_t):
+        carry, h_prev = cc
+        hh = h_prev.reshape(b, h, dh)
+        carry, h_t = _slstm_step(p, carry, x_t.astype(jnp.float32), hh)
+        return (carry, h_t), h_t
+
+    (carry, h_last), hs = jax.lax.scan(step, (carry, h_prev),
+                                       jnp.moveaxis(xs, 1, 0))
+    hs = jnp.moveaxis(hs, 0, 1).astype(x.dtype)
+    y = hs * jax.nn.silu(z)
+    c, n, m = carry
+    return y @ p["down"], {"c": c, "n": n, "m": m, "h": h_last}
+
+
+def init_slstm_state(cfg, batch: int):
+    d_in, h, dh = _dims(cfg)
+    zero = jnp.zeros((batch, d_in), jnp.float32)
+    return {"c": zero, "n": zero + 1e-6, "m": jnp.full((batch, d_in), -1e30, jnp.float32),
+            "h": zero}
+
+
+def slstm_step(p, x, state, cfg):
+    d_in, h, dh = _dims(cfg)
+    b = x.shape[0]
+    xz = x @ p["up"]
+    xs, z = jnp.split(xz, 2, axis=-1)
+    carry = (state["c"], state["n"], state["m"])
+    hh = state["h"].reshape(b, h, dh)
+    carry, h_t = _slstm_step(p, carry, xs.astype(jnp.float32), hh)
+    y = h_t.astype(x.dtype) * jax.nn.silu(z)
+    c, n, m = carry
+    return y @ p["down"], {"c": c, "n": n, "m": m, "h": h_t}

@@ -1,0 +1,1 @@
+"""Real-execution serving substrate (engine, router, cache accounting)."""

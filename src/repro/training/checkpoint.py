@@ -1,0 +1,42 @@
+"""Checkpointing: flattened-pytree .npz save/restore (numpy only).
+
+The checkpoint doubles as the serving snapshot format (SnapshotStore uses
+the same layout) — a trained model's checkpoint IS its pre-baked cold-start
+image, closing the loop between the training and serving halves.
+"""
+from __future__ import annotations
+
+import os
+import pickle
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def save(path: str, params: Any, *, extra: Optional[dict] = None) -> int:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    leaves, treedef = jax.tree.flatten(params)
+    arrs = {f"a{i}": np.asarray(x) for i, x in enumerate(leaves)}
+    meta = {"treedef": treedef, "extra": extra or {}}
+    with open(path, "wb") as f:
+        np.savez(f, __meta__=np.frombuffer(pickle.dumps(meta), np.uint8), **arrs)
+    return os.path.getsize(path)
+
+
+def restore(path: str) -> Tuple[Any, dict]:
+    with np.load(path, allow_pickle=False) as z:
+        meta = pickle.loads(z["__meta__"].tobytes())
+        n = len(z.files) - 1
+        leaves = [jnp.asarray(z[f"a{i}"]) for i in range(n)]
+    return jax.tree.unflatten(meta["treedef"], leaves), meta["extra"]
+
+
+def tree_equal(a: Any, b: Any) -> bool:
+    la, ta = jax.tree.flatten(a)
+    lb, tb = jax.tree.flatten(b)
+    if ta != tb or len(la) != len(lb):
+        return False
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(la, lb))

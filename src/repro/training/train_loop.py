@@ -1,0 +1,65 @@
+"""Jitted train step + training loop.
+
+``make_train_step`` builds the (params, opt_state, batch) -> (params,
+opt_state, metrics) function; distribution is pure GSPMD — the dry-run jits
+it with in/out shardings, CPU tests jit it on one device.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.registry import ModelBundle
+from repro.training.optimizer import (OptimizerConfig, OptState,
+                                      apply_updates, init_opt_state)
+
+
+def make_train_step(bundle: ModelBundle, opt_cfg: OptimizerConfig):
+    def train_step(params, opt_state: OptState, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            bundle.loss, has_aux=True)(params, batch)
+        params, opt_state, opt_metrics = apply_updates(
+            opt_cfg, params, grads, opt_state)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["total_loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+@dataclass
+class TrainResult:
+    losses: list
+    steps: int
+    wall_s: float
+    final_params: Any
+    tokens_per_s: float
+
+
+def train(bundle: ModelBundle, data_iter, *, steps: int,
+          opt_cfg: Optional[OptimizerConfig] = None, log_every: int = 10,
+          log_fn: Callable[[str], None] = print) -> TrainResult:
+    opt_cfg = opt_cfg or OptimizerConfig(total_steps=steps)
+    params = bundle.init(jax.random.key(0))
+    opt_state = init_opt_state(params)
+    step_fn = jax.jit(make_train_step(bundle, opt_cfg), donate_argnums=(0, 1))
+    losses = []
+    tokens = 0
+    t0 = time.perf_counter()
+    for i in range(steps):
+        batch = next(data_iter)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        loss = float(metrics["loss"])
+        tokens += int(metrics["tokens"])
+        losses.append(loss)
+        if log_every and (i % log_every == 0 or i == steps - 1):
+            log_fn(f"step {i:5d} loss {loss:.4f} "
+                   f"grad_norm {float(metrics['grad_norm']):.3f} "
+                   f"lr {float(metrics['lr']):.2e}")
+    wall = time.perf_counter() - t0
+    return TrainResult(losses, steps, wall, params, tokens / max(wall, 1e-9))

@@ -1,0 +1,132 @@
+"""Kernel validation: Pallas (interpret=True) and the memory-bounded jnp
+paths vs the naive oracles in ``kernels/ref.py`` — shape/dtype sweeps with
+assert_allclose (assignment requirement)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.decode_attention import decode_attention_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.ssm_scan import ssm_scan_pallas
+
+RNG = np.random.default_rng(42)
+
+
+def _tol(dtype):
+    return dict(atol=5e-2, rtol=5e-2) if dtype == jnp.bfloat16 else \
+        dict(atol=3e-5, rtol=3e-5)
+
+
+ATTN_CASES = [
+    # (b, sq, skv, hq, hkv, d, causal, window)
+    (2, 128, 128, 4, 2, 64, True, None),
+    (1, 256, 256, 8, 8, 32, True, None),
+    (2, 128, 128, 4, 1, 64, True, 64),      # SWA
+    (1, 128, 384, 2, 2, 128, True, None),   # suffix-aligned prefill
+    (1, 128, 128, 4, 4, 64, False, None),   # encoder (non-causal)
+    (3, 256, 256, 6, 2, 48, True, 128),
+]
+
+
+@pytest.mark.parametrize("case", ATTN_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_oracle(case, dtype):
+    b, sq, skv, hq, hkv, d, causal, window = case
+    q = jnp.asarray(RNG.normal(size=(b, sq, hq, d)), dtype)
+    k = jnp.asarray(RNG.normal(size=(b, skv, hkv, d)), dtype)
+    v = jnp.asarray(RNG.normal(size=(b, skv, hkv, d)), dtype)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    got_pallas = flash_attention_pallas(q, k, v, causal=causal, window=window)
+    got_ref = ops.flash_attention(q, k, v, causal=causal, window=window,
+                                  impl="reference")
+    np.testing.assert_allclose(np.asarray(got_pallas, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+    np.testing.assert_allclose(np.asarray(got_ref, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+DECODE_CASES = [
+    (2, 512, 8, 2, 64),
+    (1, 1024, 4, 4, 128),
+    (3, 512, 8, 1, 32),
+    (1, 2048, 16, 4, 64),
+]
+
+
+@pytest.mark.parametrize("case", DECODE_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_matches_oracle(case, dtype):
+    b, s, hq, hkv, d = case
+    q = jnp.asarray(RNG.normal(size=(b, hq, d)), dtype)
+    k = jnp.asarray(RNG.normal(size=(b, s, hkv, d)), dtype)
+    v = jnp.asarray(RNG.normal(size=(b, s, hkv, d)), dtype)
+    mask = jnp.asarray(RNG.random((b, s)) > 0.25)
+    want = ref.decode_attention_ref(q, k, v, mask)
+    got_p = decode_attention_pallas(q, k, v, mask)
+    got_r = ops.decode_attention(q, k, v, mask, impl="reference")
+    np.testing.assert_allclose(np.asarray(got_p, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+    np.testing.assert_allclose(np.asarray(got_r, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+SSM_CASES = [
+    (2, 256, 256, 8),
+    (1, 512, 512, 16),
+    (2, 128, 1024, 4),
+]
+
+
+@pytest.mark.parametrize("case", SSM_CASES)
+def test_ssm_scan_matches_oracle(case):
+    bt, t, din, n = case
+    u = jnp.asarray(RNG.normal(size=(bt, t, din)), jnp.float32)
+    dt = jnp.asarray(RNG.random((bt, t, din)) * 0.1, jnp.float32)
+    A = -jnp.asarray(RNG.random((din, n)) + 0.5, jnp.float32)
+    Bm = jnp.asarray(RNG.normal(size=(bt, t, n)), jnp.float32)
+    Cm = jnp.asarray(RNG.normal(size=(bt, t, n)), jnp.float32)
+    Dm = jnp.asarray(RNG.normal(size=(din,)), jnp.float32)
+    h0 = jnp.asarray(RNG.normal(size=(bt, din, n)), jnp.float32)
+    want_y, want_h = ref.ssm_scan_ref(u, dt, A, Bm, Cm, Dm, h0)
+    got_y, got_h = ssm_scan_pallas(u, dt, A, Bm, Cm, Dm, h0)
+    np.testing.assert_allclose(got_y, want_y, atol=5e-5, rtol=5e-5)
+    np.testing.assert_allclose(got_h, want_h, atol=5e-5, rtol=5e-5)
+    ref_y, ref_h = ops.ssm_scan(u, dt, A, Bm, Cm, Dm, h0, impl="reference")
+    np.testing.assert_allclose(ref_y, want_y, atol=5e-5, rtol=5e-5)
+    np.testing.assert_allclose(ref_h, want_h, atol=5e-5, rtol=5e-5)
+
+
+def test_ssm_step_matches_scan():
+    """Decode recurrence == one step of the full scan."""
+    bt, din, n = 2, 64, 8
+    u = jnp.asarray(RNG.normal(size=(bt, 4, din)), jnp.float32)
+    dt = jnp.asarray(RNG.random((bt, 4, din)) * 0.1, jnp.float32)
+    A = -jnp.asarray(RNG.random((din, n)) + 0.5, jnp.float32)
+    Bm = jnp.asarray(RNG.normal(size=(bt, 4, n)), jnp.float32)
+    Cm = jnp.asarray(RNG.normal(size=(bt, 4, n)), jnp.float32)
+    Dm = jnp.asarray(RNG.normal(size=(din,)), jnp.float32)
+    h = jnp.zeros((bt, din, n), jnp.float32)
+    ys = []
+    for t in range(4):
+        y, h = ops.ssm_step(u[:, t], dt[:, t], A, Bm[:, t], Cm[:, t], Dm, h)
+        ys.append(y)
+    got = jnp.stack(ys, 1)
+    want, want_h = ref.ssm_scan_ref(u, dt, A, Bm, Cm, Dm,
+                                    jnp.zeros((bt, din, n), jnp.float32))
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(h, want_h, atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_pallas_vs_reference_chunked_grid():
+    """Block-size sweep: different grid tilings agree."""
+    q = jnp.asarray(RNG.normal(size=(1, 256, 4, 64)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(1, 256, 2, 64)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(1, 256, 2, 64)), jnp.float32)
+    want = ref.flash_attention_ref(q, k, v, causal=True, window=None)
+    for bq, bk in [(64, 64), (128, 32), (32, 128), (256, 256)]:
+        got = flash_attention_pallas(q, k, v, causal=True, window=None,
+                                     block_q=bq, block_k=bk)
+        np.testing.assert_allclose(got, want, atol=3e-5, rtol=3e-5,
+                                   err_msg=f"blocks {bq}x{bk}")
