@@ -7,13 +7,15 @@ Prints ``name,us_per_call,derived`` CSV.  Modules:
   bench_csf        Table 5: frequency-reduction techniques (simulated)
   bench_tradeoffs  §6: energy/accuracy Pareto + predictor study
   bench_serving    serving microbenchmarks + compile-time (scan vs unroll)
+  bench_fleet      fleet replay: predictive autoscaling vs fixed TTL + the
+                   sim-vs-fleet calibration loop (virtual clock)
   bench_roofline   dry-run/roofline summary (deliverables e+g)
 """
 import sys
 import time
 import traceback
 
-from benchmarks import (bench_csf, bench_csl, bench_factors,
+from benchmarks import (bench_csf, bench_csl, bench_factors, bench_fleet,
                         bench_platforms, bench_qos, bench_roofline,
                         bench_serving, bench_tradeoffs)
 
@@ -25,6 +27,7 @@ MODULES = [
     ("tradeoffs", bench_tradeoffs),
     ("platforms", bench_platforms),
     ("serving", bench_serving),
+    ("fleet", bench_fleet),
     ("roofline", bench_roofline),
 ]
 

@@ -122,7 +122,10 @@ class Simulator:
         self._cid = itertools.count()
         self._expiry_stamp: Dict[int, float] = {}
         self._inflight_prewarm: set = set()   # functions being prewarmed
-        self._rl_tombstones: Dict[str, List[Tuple[float, int]]] = defaultdict(list)
+        # function -> [(t_expired, container_id, idle_s)] expiries awaiting an
+        # RL reward signal; resolved by the next arrival for that function
+        self._rl_tombstones: Dict[str, List[Tuple[float, int, float]]] = \
+            defaultdict(list)
         self.phase_log: List[Breakdown] = []
 
     # ------------------------------------------------------------------ #
@@ -339,6 +342,13 @@ class Simulator:
         stones = self._rl_tombstones.get(function)
         if not stones:
             return
+        # Resolution semantics: only the NEWEST expiry is credited with this
+        # outcome (it made the most recent, best-informed TTL decision); any
+        # older tombstones were superseded before an arrival could judge
+        # them, so they are cleared as stale rather than double-counted as
+        # misses.  A miss only counts if the arrival lands within
+        # rl_miss_window_s of the expiry — later arrivals would have missed
+        # under any reasonable TTL.
         t_expired, cid, idle_s = stones.pop()
         within = (self.now - t_expired) <= self.cfg.rl_miss_window_s
         ka.resolve(cid, idle_s=idle_s, missed=missed and within)
@@ -377,7 +387,10 @@ class Simulator:
                 self._reuse(c, pend)
                 progressed = True
                 continue
-            worker = self.suite.placement.choose_worker(fn, ctx)
+            # same policy-order eviction as the arrival path: a queued
+            # request may reclaim warm-idle memory held by other functions
+            # (otherwise it stalls until an unrelated TTL expiry)
+            worker = self._find_memory(fn)
             if worker is not None:
                 self._cold_start(worker, fn, pend)
                 progressed = True

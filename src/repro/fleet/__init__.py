@@ -1,0 +1,24 @@
+"""Concurrent, policy-driven serving fleet (the live twin of the simulator).
+
+Layers:
+  clock       virtual + scaled wall-clock time under one protocol
+  frontend    per-function queues, admission control, SLO deadlines
+  pool        replicas, concurrency slots, micro-batching, exec backends
+  autoscaler  core/policies + core/predictors adapted to live engines
+  loadgen     trace replay -> QoSLedger (sim-vs-real calibration loop)
+"""
+from repro.fleet.autoscaler import Autoscaler, FleetContext
+from repro.fleet.clock import Clock, VirtualClock, WallClock
+from repro.fleet.frontend import (AdmissionConfig, DropLedger, Frontend,
+                                  Request)
+from repro.fleet.loadgen import FleetConfig, FleetRunner, replay
+from repro.fleet.pool import (EngineBackend, EnginePool, EngineProfile,
+                              ExecutionBackend, ModeledBackend, Replica)
+
+__all__ = [
+    "Autoscaler", "FleetContext", "Clock", "VirtualClock", "WallClock",
+    "AdmissionConfig", "DropLedger", "Frontend", "Request",
+    "FleetConfig", "FleetRunner", "replay",
+    "EngineBackend", "EnginePool", "EngineProfile", "ExecutionBackend",
+    "ModeledBackend", "Replica",
+]

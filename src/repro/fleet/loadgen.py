@@ -1,0 +1,334 @@
+"""Trace replay against the fleet: the sim-vs-real calibration loop.
+
+``replay(trace, suite)`` drives a :class:`~repro.core.workload.Trace`
+through the frontend → pool → autoscaler stack and returns the same
+:class:`~repro.core.metrics.QoSLedger` the discrete-event simulator
+produces, so a trace replayed through ``core/simulator.py`` and through
+``fleet/loadgen.py`` yields summaries with an identical field schema —
+P50/P95/P99 latency, cold rate, idle GB-s, cost — and can be compared
+line-for-line.
+
+Run modes (orthogonal to everything else):
+
+  * ``VirtualClock`` + ``ModeledBackend``  — fast deterministic replay
+    (tests, benchmarks, policy search);
+  * ``WallClock``    + ``EngineBackend``   — real engines, real XLA cold
+    starts, wall-clock timing (the ground-truth side of the loop).
+
+The event loop mirrors the simulator's semantics (one slot = one in-flight
+execution, scale-to-zero on TTL expiry, pressure evictions in policy
+order, prewarm ticks, chain cascades) and adds what only a live fleet
+needs: admission control with SLO deadlines, per-function queues,
+concurrency slots per replica, and micro-batching of shape-compatible
+requests.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.costmodel import CostModel
+from repro.core.lifecycle import Breakdown, ContainerState, Phase
+from repro.core.metrics import QoSLedger, RequestRecord
+from repro.core.policies.base import PolicySuite
+from repro.core.workload import Trace
+from repro.fleet.autoscaler import Autoscaler, FleetContext
+from repro.fleet.clock import Clock, VirtualClock
+from repro.fleet.frontend import AdmissionConfig, Frontend, Request
+from repro.fleet.pool import EnginePool, ExecutionBackend, ModeledBackend
+
+
+@dataclass
+class FleetConfig:
+    num_workers: int = 4
+    worker_memory_mb: float = 16_384.0
+    slots_per_replica: int = 1          # >1 = concurrent executions/replica
+    max_batch: int = 1                  # micro-batch size cap
+    max_queue_per_function: int = 100_000
+    slo_latency_s: Optional[float] = None
+    sanitize_on_reuse: bool = True      # match SimConfig defaults
+    sanitize_cost_s: float = 0.004
+    rl_miss_window_s: float = 60.0
+    vary_shapes: bool = False           # draw per-request seq_len (batch test)
+    shape_choices: tuple = (16, 32, 64)
+    default_seq_len: int = 32
+    seed: int = 0
+
+
+class FleetRunner:
+    """One trace replay: frontend + pool + autoscaler under one clock."""
+
+    def __init__(self, trace: Trace, suite: PolicySuite, *,
+                 cost_model: Optional[CostModel] = None,
+                 cfg: Optional[FleetConfig] = None,
+                 clock: Optional[Clock] = None,
+                 backend: Optional[ExecutionBackend] = None):
+        self.trace = trace
+        self.suite = suite
+        self.cost_model = cost_model or CostModel()
+        self.cfg = cfg or FleetConfig()
+        self.clock = clock or VirtualClock()
+        self.backend = backend or ModeledBackend(self.cost_model)
+        self.frontend = Frontend(AdmissionConfig(
+            max_queue_per_function=self.cfg.max_queue_per_function,
+            slo_latency_s=self.cfg.slo_latency_s))
+        self.pool = EnginePool(trace.functions,
+                               num_workers=self.cfg.num_workers,
+                               worker_memory_mb=self.cfg.worker_memory_mb,
+                               backend=self.backend,
+                               slots_per_replica=self.cfg.slots_per_replica)
+        self.autoscaler = Autoscaler(suite,
+                                     rl_miss_window_s=self.cfg.rl_miss_window_s)
+        self.ledger = QoSLedger(
+            horizon=trace.horizon,
+            cluster_capacity_gb=self.cfg.num_workers
+            * self.cfg.worker_memory_mb / 1024.0)
+        self.now = 0.0
+        self._events: list = []
+        self._seq = itertools.count()
+        self._rid = itertools.count()
+        self._expiry_stamp: Dict[int, float] = {}
+        self._inflight_prewarm: set = set()
+
+    # ------------------------------------------------------------------ #
+    def _push(self, t: float, kind: str, payload=None):
+        heapq.heappush(self._events, (t, next(self._seq), kind, payload))
+
+    def _ctx(self) -> FleetContext:
+        return FleetContext(self.pool, self.frontend, self.cost_model,
+                            self.now, self.suite)
+
+    def _mk_request(self, function: str, arrival: float, chain=(),
+                    rng: Optional[np.random.Generator] = None) -> Request:
+        if self.cfg.vary_shapes and rng is not None:
+            seq = int(rng.choice(self.cfg.shape_choices))
+        else:
+            seq = self.cfg.default_seq_len
+        return Request(id=next(self._rid), function=function, arrival=arrival,
+                       seq_len=seq, chain=tuple(chain))
+
+    # ------------------------------------------------------------------ #
+    def run(self) -> QoSLedger:
+        rng = np.random.default_rng(self.cfg.seed)
+        for inv in self.trace.invocations:
+            self._push(inv.time, "arrival",
+                       self._mk_request(inv.function, inv.time, inv.chain, rng))
+        if self.autoscaler.tick_interval is not None:
+            self._push(0.0, "tick", None)
+
+        while self._events:
+            t, _, kind, payload = heapq.heappop(self._events)
+            if t > self.trace.horizon and kind == "tick":
+                continue
+            self.clock.sleep_until(t)
+            self.now = max(self.now, t)
+            getattr(self, f"_on_{kind}")(payload)
+
+        # close out idle accounting at horizon
+        for c in list(self.pool.containers()):
+            if c.state == ContainerState.WARM_IDLE:
+                end = max(self.trace.horizon, c.warm_since)
+                self.ledger.add_idle(end - c.warm_since, c.memory_mb / 1024.0)
+        self.ledger.dropped = self.frontend.drops.total
+        return self.ledger
+
+    # ------------------------------------------------------------------ #
+    # handlers
+    # ------------------------------------------------------------------ #
+    def _on_arrival(self, req: Request):
+        self.autoscaler.observe_arrival(req.function, self.now)
+        if self.frontend.submit(req):
+            self._try_dispatch(req.function)
+
+    def _on_tick(self, _):
+        ctx = self._ctx()
+        for fn_name in self.autoscaler.prewarm_targets(self.now, ctx):
+            if (ctx.warm_idle(fn_name) or fn_name in self._inflight_prewarm
+                    or ctx.active_count(fn_name)):
+                continue
+            worker = self._find_worker(self.trace.functions[fn_name], ctx)
+            if worker is None:
+                continue
+            self._inflight_prewarm.add(fn_name)
+            self._launch(fn_name, worker, [])
+        if self.now <= self.trace.horizon:
+            self._push(self.now + self.autoscaler.tick_interval, "tick", None)
+
+    def _on_start_done(self, payload):
+        cid, batch, bd = payload
+        replica = self.pool.replicas.get(cid)
+        if replica is None:
+            return
+        if not batch:
+            # prewarmed replica -> warm idle; queued work may claim it now
+            self._inflight_prewarm.discard(replica.function)
+            self._to_idle(replica)
+            self._drain_all()
+            return
+        st = self.suite.startup
+        penalty = 0.0
+        if st.deps_fraction < 1.0 and replica.container.uses == 0:
+            full = self.cost_model.breakdown(replica.spec).seconds[Phase.DEPS_LOAD]
+            penalty = (st.first_run_penalty_frac * full
+                       * (1 - st.deps_fraction))
+        self._begin_exec(replica, batch, cold=True, bd=bd,
+                         first_run_penalty=penalty)
+
+    def _on_exec_done(self, payload):
+        cid, batch = payload
+        replica = self.pool.replicas.get(cid)
+        if replica is None:
+            return
+        replica.inflight -= 1
+        for req in batch:
+            if req.chain:
+                nxt = self._mk_request(req.chain[0], self.now, req.chain[1:])
+                self._push(self.now, "arrival", nxt)
+        if replica.inflight == 0:
+            self._to_idle(replica)
+        self._drain_all()
+
+    def _on_expire(self, payload):
+        cid, stamp = payload
+        replica = self.pool.replicas.get(cid)
+        if replica is None or replica.state != ContainerState.WARM_IDLE:
+            return
+        if self._expiry_stamp.get(cid) != stamp:
+            return  # superseded by a reuse
+        c = replica.container
+        self.autoscaler.on_expire(c, self.now, self.now - c.warm_since)
+        self._release(replica)
+        self._drain_all()
+
+    # ------------------------------------------------------------------ #
+    # dispatch machinery
+    # ------------------------------------------------------------------ #
+    def _try_dispatch(self, fn_name: str) -> bool:
+        if self.frontend.head(fn_name, self.now) is None:
+            return False
+        ctx = self._ctx()
+        c = self.suite.placement.choose_container(fn_name, ctx)
+        if c is not None:
+            replica = self.pool.replica_for(c)
+            batch = self._take_batch(fn_name)
+            if not batch:
+                return False
+            self._reuse(replica, batch)
+            return True
+        # concurrency slots: join an ACTIVE replica with spare capacity
+        replica = self.pool.free_slot_replica(fn_name)
+        if replica is not None:
+            batch = self._take_batch(fn_name)
+            if not batch:
+                return False
+            self._begin_exec(replica, batch, cold=False, bd=None)
+            return True
+        # cold path
+        self.autoscaler.on_miss(fn_name, self.now)
+        fn = self.trace.functions[fn_name]
+        worker = self._find_worker(fn, ctx)
+        if worker is None:
+            return False          # stays queued; retried on the next release
+        batch = self._take_batch(fn_name)
+        if not batch:
+            return False
+        self._launch(fn_name, worker, batch)
+        return True
+
+    def _take_batch(self, fn_name: str) -> List[Request]:
+        return self.frontend.take_batch(fn_name, self.now, self.cfg.max_batch)
+
+    def _find_worker(self, fn, ctx: FleetContext) -> Optional[int]:
+        w = self.suite.placement.choose_worker(fn, ctx)
+        if w is not None:
+            return w
+        for victim in self.autoscaler.evict_order(ctx):
+            self._release(self.pool.replica_for(victim))
+            w = self.suite.placement.choose_worker(fn, ctx)
+            if w is not None:
+                return w
+        return None
+
+    def _launch(self, fn_name: str, worker: int, batch: List[Request]):
+        st = self.suite.startup
+        from_snap = st.snapshot and fn_name in self.pool.snapshots
+        replica, bd = self.pool.start_replica(
+            fn_name, worker, self.now, from_snapshot=from_snap,
+            deps_fraction=st.deps_fraction if not from_snap else 1.0)
+        if st.snapshot:
+            self.pool.snapshots.add(fn_name)
+        self.ledger.containers_launched += 1
+        self._push(self.now + bd.total, "start_done", (replica.id, batch, bd))
+
+    def _reuse(self, replica, batch: List[Request]):
+        c = replica.container
+        idle = self.now - c.warm_since
+        self.ledger.add_idle(idle, c.memory_mb / 1024.0)
+        self.autoscaler.on_reuse(c, self._ctx(), idle)
+        c.sanitized = self.cfg.sanitize_on_reuse
+        self._begin_exec(replica, batch, cold=False, bd=None)
+
+    def _begin_exec(self, replica, batch: List[Request], *, cold: bool,
+                    bd: Optional[Breakdown], first_run_penalty: float = 0.0):
+        c = replica.container
+        c.state = ContainerState.ACTIVE
+        c.uses += 1
+        c.last_used = self.now
+        replica.inflight += 1
+        exec_t = self.backend.execute(replica, batch,
+                                      first_run_penalty=first_run_penalty)
+        if not cold and self.cfg.sanitize_on_reuse:
+            exec_t += self.cfg.sanitize_cost_s
+        end = self.now + exec_t
+        # the replica's footprint is statically partitioned across its
+        # concurrency slots, and a micro-batch further splits its slot's
+        # share — so summed exec GB-s never exceeds replica-seconds even
+        # with overlapping slot executions
+        mem_gb = (replica.spec.memory_mb / 1024.0
+                  / replica.slots / len(batch))
+        for req in batch:
+            rec = RequestRecord(req.function, req.arrival, self.now, end,
+                                cold=cold, startup=bd if cold else None)
+            self.ledger.record(rec, memory_gb=mem_gb)
+        self._push(end, "exec_done", (replica.id, batch))
+
+    def _to_idle(self, replica):
+        c = replica.container
+        c.state = ContainerState.WARM_IDLE
+        c.warm_since = self.now
+        c.last_used = self.now
+        ttl = self.autoscaler.ttl_for(c, self._ctx())
+        expiry = self.now + ttl
+        c.expiry = expiry
+        self._expiry_stamp[c.id] = expiry
+        if expiry != float("inf"):
+            self._push(expiry, "expire", (c.id, expiry))
+
+    def _release(self, replica):
+        c = replica.container
+        if c.state == ContainerState.WARM_IDLE:
+            self.ledger.add_idle(self.now - c.warm_since, c.memory_mb / 1024.0)
+        self.pool.release(replica)
+
+    def _drain_all(self):
+        progressed = True
+        while progressed:
+            progressed = False
+            for fn_name in self.frontend.pending_functions(self.now):
+                if self._try_dispatch(fn_name):
+                    progressed = True
+
+
+def replay(trace: Trace, suite: PolicySuite, *,
+           cost_model: Optional[CostModel] = None,
+           cfg: Optional[FleetConfig] = None,
+           clock: Optional[Clock] = None,
+           backend: Optional[ExecutionBackend] = None) -> QoSLedger:
+    """Replay ``trace`` under ``suite``; returns the QoS ledger (same schema
+    as ``core.simulator.simulate`` on the same trace)."""
+    return FleetRunner(trace, suite, cost_model=cost_model, cfg=cfg,
+                       clock=clock, backend=backend).run()

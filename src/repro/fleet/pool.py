@@ -1,0 +1,262 @@
+"""Engine pool: per-function replicas, concurrency slots, micro-batching.
+
+The pool replaces the router's one-engine-per-function limit with N
+replicas per function, each holding ``slots`` concurrency slots; one slot
+executes one (possibly micro-batched) request group at a time.  Replica
+lifecycle is expressed with the same :class:`~repro.core.lifecycle.Container`
+FSM the simulator and policies use, so every ``core/policies`` suite drives
+the fleet unchanged.
+
+Execution is abstracted behind :class:`ExecutionBackend`:
+
+  * :class:`ModeledBackend` — durations from the calibrated
+    :class:`~repro.core.costmodel.CostModel`; combined with the virtual
+    clock this gives fast, deterministic replays directly comparable with
+    ``core/simulator.py``.
+  * :class:`EngineBackend` — real :class:`~repro.serving.engine.InferenceEngine`
+    replicas: cold starts pay genuine XLA compilation (or snapshot restore
+    through :class:`~repro.serving.engine.SnapshotStore`) and execution runs
+    the compiled model, all wall-clock measured.
+"""
+from __future__ import annotations
+
+import itertools
+import time
+from dataclasses import dataclass
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.costmodel import CostModel
+from repro.core.lifecycle import (Breakdown, Container, ContainerState,
+                                  FunctionSpec)
+from repro.fleet.frontend import Request
+
+
+@dataclass
+class Replica:
+    """One warm-capable unit of a function: a Container plus slots/engine."""
+
+    container: Container
+    spec: FunctionSpec
+    slots: int = 1
+    inflight: int = 0
+    engine: Optional[object] = None      # real InferenceEngine when EngineBackend
+
+    @property
+    def id(self) -> int:
+        return self.container.id
+
+    @property
+    def function(self) -> str:
+        return self.container.function
+
+    @property
+    def state(self) -> ContainerState:
+        return self.container.state
+
+
+# --------------------------------------------------------------------------- #
+# execution backends
+# --------------------------------------------------------------------------- #
+
+
+class ExecutionBackend:
+    """Where a replica's startup and execution durations come from."""
+
+    def provision(self, replica: Replica, *, from_snapshot: bool,
+                  concurrent_colds: int, deps_fraction: float) -> Breakdown:
+        raise NotImplementedError
+
+    def execute(self, replica: Replica, requests: Sequence[Request], *,
+                first_run_penalty: float = 0.0) -> float:
+        """Seconds to serve ``requests`` as one micro-batch on one slot."""
+        raise NotImplementedError
+
+    def release(self, replica: Replica) -> None:
+        pass
+
+
+class ModeledBackend(ExecutionBackend):
+    """Cost-model-driven durations (deterministic; pairs with VirtualClock).
+
+    Micro-batching follows the usual sub-linear accelerator scaling: a batch
+    of k costs ``exec_time * (1 + batch_alpha * (k - 1))`` rather than k
+    serial executions.
+    """
+
+    def __init__(self, cost_model: Optional[CostModel] = None,
+                 batch_alpha: float = 0.15):
+        self.cost_model = cost_model or CostModel()
+        self.batch_alpha = batch_alpha
+
+    def provision(self, replica: Replica, *, from_snapshot: bool,
+                  concurrent_colds: int, deps_fraction: float) -> Breakdown:
+        return self.cost_model.breakdown(
+            replica.spec, concurrent_colds=concurrent_colds,
+            from_snapshot=from_snapshot, deps_fraction=deps_fraction)
+
+    def execute(self, replica: Replica, requests: Sequence[Request], *,
+                first_run_penalty: float = 0.0) -> float:
+        base = self.cost_model.exec_time(replica.spec,
+                                         first_run_penalty=first_run_penalty)
+        return base * (1.0 + self.batch_alpha * (len(requests) - 1))
+
+
+@dataclass
+class EngineProfile:
+    """How a function name maps onto a real model endpoint."""
+
+    arch: str
+    max_seq: int = 32
+    batch: int = 1
+    decode_steps: int = 4
+    smoke: bool = True
+
+
+class EngineBackend(ExecutionBackend):
+    """Real JAX engines; durations are measured, not modeled."""
+
+    def __init__(self, store=None, profiles: Optional[Dict[str, EngineProfile]] = None):
+        self.store = store
+        self.profiles: Dict[str, EngineProfile] = profiles or {}
+
+    def profile(self, function: str) -> EngineProfile:
+        prof = self.profiles.get(function)
+        if prof is None:
+            raise KeyError(f"no EngineProfile registered for {function!r}")
+        return prof
+
+    def provision(self, replica: Replica, *, from_snapshot: bool,
+                  concurrent_colds: int, deps_fraction: float) -> Breakdown:
+        from repro.serving.engine import InferenceEngine
+        prof = self.profile(replica.function)
+        engine = InferenceEngine(prof.arch, smoke=prof.smoke,
+                                 max_seq=prof.max_seq, batch=prof.batch,
+                                 store=self.store)
+        replica.engine = engine
+        return engine.cold_start(from_snapshot=from_snapshot)
+
+    def execute(self, replica: Replica, requests: Sequence[Request], *,
+                first_run_penalty: float = 0.0) -> float:
+        """Serve a micro-batch on the real engine.
+
+        The engine is compiled at a fixed (batch, max_seq) shape, so a
+        k-request micro-batch costs ceil(k / batch) engine calls (inputs
+        are padded to max_seq; per-request seq_len never changes the
+        compiled shape).  ``first_run_penalty`` models FaaSLight deferred
+        dependency loading, which has no real-engine analogue — the real
+        engine always loads fully at cold start — so it is ignored here.
+        """
+        prof = self.profile(replica.function)
+        tokens = np.ones((prof.batch, prof.max_seq), np.int32)
+        calls = max(1, -(-len(requests) // prof.batch))
+        total = 0.0
+        for _ in range(calls):
+            _, duration = self.serve(replica, tokens,
+                                     decode_steps=prof.decode_steps)
+            total += duration
+        return total
+
+    def serve(self, replica: Replica, tokens: np.ndarray, *,
+              decode_steps: int = 4, extras=None) -> Tuple[np.ndarray, float]:
+        t0 = time.perf_counter()
+        out, _ = replica.engine.serve(tokens, decode_steps=decode_steps,
+                                      extras=extras)
+        return out, time.perf_counter() - t0
+
+    def release(self, replica: Replica) -> None:
+        if replica.engine is not None:
+            replica.engine.shutdown()
+            replica.engine = None
+
+
+# --------------------------------------------------------------------------- #
+# the pool
+# --------------------------------------------------------------------------- #
+
+
+class EnginePool:
+    """Replica registry with worker-level memory accounting."""
+
+    def __init__(self, functions: Dict[str, FunctionSpec], *,
+                 num_workers: int = 4, worker_memory_mb: float = 16_384.0,
+                 backend: Optional[ExecutionBackend] = None,
+                 slots_per_replica: int = 1):
+        self.functions = functions
+        self.num_workers = num_workers
+        self.worker_memory_mb = worker_memory_mb
+        self.backend = backend or ModeledBackend()
+        self.slots_per_replica = slots_per_replica
+        self.replicas: Dict[int, Replica] = {}
+        self.worker_used: List[float] = [0.0] * num_workers
+        self._cid = itertools.count()
+        self.snapshots: set = set()        # functions with a snapshot baked
+        self.phase_log: List[Breakdown] = []
+
+    # -- container views (the policy vocabulary) ------------------------- #
+    def containers(self) -> Iterable[Container]:
+        return (r.container for r in self.replicas.values())
+
+    def warm_idle(self, function: str) -> List[Container]:
+        return [r.container for r in self.replicas.values()
+                if r.container.is_reusable(function)]
+
+    def all_warm_idle(self) -> List[Container]:
+        return [r.container for r in self.replicas.values()
+                if r.container.state == ContainerState.WARM_IDLE]
+
+    def replica_for(self, container_or_id) -> Optional[Replica]:
+        cid = getattr(container_or_id, "id", container_or_id)
+        return self.replicas.get(cid)
+
+    def free_slot_replica(self, function: str) -> Optional[Replica]:
+        """An ACTIVE replica that can take one more concurrent execution."""
+        best = None
+        for r in self.replicas.values():
+            if (r.function == function
+                    and r.container.state == ContainerState.ACTIVE
+                    and r.inflight < r.slots):
+                if best is None or r.inflight < best.inflight:
+                    best = r
+        return best
+
+    def free_mb(self, worker: int) -> float:
+        return self.worker_memory_mb - self.worker_used[worker]
+
+    def active_count(self, function: str) -> int:
+        return sum(1 for r in self.replicas.values()
+                   if r.function == function
+                   and r.container.state in (ContainerState.ACTIVE,
+                                             ContainerState.PROVISIONING))
+
+    def concurrent_colds(self, worker: int) -> int:
+        return sum(1 for r in self.replicas.values()
+                   if r.container.worker == worker
+                   and r.container.state == ContainerState.PROVISIONING)
+
+    # -- lifecycle ------------------------------------------------------- #
+    def start_replica(self, function: str, worker: int, now: float, *,
+                      from_snapshot: bool = False,
+                      deps_fraction: float = 1.0) -> Tuple[Replica, Breakdown]:
+        fn = self.functions[function]
+        cid = next(self._cid)
+        c = Container(id=cid, function=function,
+                      state=ContainerState.PROVISIONING, worker=worker,
+                      memory_mb=fn.memory_mb, created_at=now,
+                      has_snapshot=from_snapshot)
+        replica = Replica(container=c, spec=fn, slots=self.slots_per_replica)
+        self.replicas[cid] = replica
+        self.worker_used[worker] += fn.memory_mb
+        bd = self.backend.provision(
+            replica, from_snapshot=from_snapshot,
+            concurrent_colds=self.concurrent_colds(worker) - 1,
+            deps_fraction=deps_fraction)
+        self.phase_log.append(bd)
+        return replica, bd
+
+    def release(self, replica: Replica) -> None:
+        self.backend.release(replica)
+        self.worker_used[replica.container.worker] -= replica.container.memory_mb
+        replica.container.state = ContainerState.DEAD
+        self.replicas.pop(replica.id, None)

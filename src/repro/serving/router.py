@@ -1,23 +1,33 @@
-"""Serverless frontend: API-gateway analogue + scale-to-zero autoscaler over
-*real* :class:`InferenceEngine` instances.
+"""Serverless frontend over *real* :class:`InferenceEngine` instances.
 
-The router owns a registry of functions (model endpoints), applies a
-keep-alive policy (TTL / snapshot restore) with a cluster memory budget, and
-records the RQ1 QoS ledger with genuinely measured cold starts.  It is the
-real-execution twin of ``core/simulator.py`` — same policy vocabulary,
-wall-clock instead of simulated time.
+Since the ``repro.fleet`` subsystem landed, the router is a thin synchronous
+facade over the fleet's building blocks: replicas live in a
+:class:`~repro.fleet.pool.EnginePool` driven by an
+:class:`~repro.fleet.pool.EngineBackend`, and scale-to-zero / eviction
+decisions go through a :class:`~repro.fleet.autoscaler.Autoscaler`
+configured with a :class:`~repro.core.policies.base.PolicySuite`
+(``FixedTTL`` by default — the provider-default behaviour the original
+router hard-coded).  For concurrent load, trace replay, micro-batching and
+predictive autoscaling use ``repro.fleet.loadgen`` directly; the router
+keeps the one-call-at-a-time API for examples and tests.
 """
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
 
 import numpy as np
 
-from repro.core.lifecycle import Breakdown
+from repro.core.costmodel import CostModel
+from repro.core.lifecycle import Breakdown, ContainerState, FunctionSpec
 from repro.core.metrics import QoSLedger, RequestRecord
-from repro.serving.engine import InferenceEngine, ServeStats, SnapshotStore
+from repro.core.policies.base import PolicySuite, Startup
+from repro.core.policies.keepalive import FixedTTL
+from repro.fleet.autoscaler import Autoscaler, FleetContext
+from repro.fleet.frontend import Frontend
+from repro.fleet.pool import EngineBackend, EnginePool, EngineProfile, Replica
+from repro.serving.engine import SnapshotStore
 
 
 @dataclass
@@ -33,76 +43,109 @@ class FunctionDef:
 class ServerlessRouter:
     def __init__(self, *, ttl_s: float = 30.0, use_snapshots: bool = True,
                  memory_budget_gb: float = 8.0,
-                 store: Optional[SnapshotStore] = None):
+                 store: Optional[SnapshotStore] = None,
+                 suite: Optional[PolicySuite] = None):
         self.ttl_s = ttl_s
         self.use_snapshots = use_snapshots
         self.memory_budget_gb = memory_budget_gb
         self.store = store if store is not None else (
             SnapshotStore() if use_snapshots else None)
+        self.suite = suite or PolicySuite(
+            name="router", keepalive=FixedTTL(ttl_s),
+            startup=Startup(snapshot=use_snapshots))
         self.functions: Dict[str, FunctionDef] = {}
-        self.engines: Dict[str, InferenceEngine] = {}
-        self.warm_since: Dict[str, float] = {}
+        self.backend = EngineBackend(store=self.store)
+        self.pool = EnginePool({}, num_workers=1,
+                               worker_memory_mb=memory_budget_gb * 1024.0,
+                               backend=self.backend)
+        self.autoscaler = Autoscaler(self.suite)
+        self._frontend = Frontend()           # empty; satisfies FleetContext
+        self._cost_model = CostModel()
         self.ledger = QoSLedger()
         self._t0 = time.monotonic()
 
     # ------------------------------------------------------------------ #
     def register(self, fdef: FunctionDef):
         self.functions[fdef.name] = fdef
+        self.pool.functions[fdef.name] = FunctionSpec(
+            name=fdef.name, package_mb=0.0,
+            memory_mb=fdef.memory_gb * 1024.0, arch=fdef.arch)
+        self.backend.profiles[fdef.name] = EngineProfile(
+            arch=fdef.arch, max_seq=fdef.max_seq, batch=fdef.batch,
+            decode_steps=fdef.decode_steps)
 
     def _now(self) -> float:
         return time.monotonic() - self._t0
 
-    def _warm_gb(self) -> float:
-        return sum(self.functions[n].memory_gb for n, e in self.engines.items()
-                   if e.warm)
+    def _ctx(self, now: float) -> FleetContext:
+        return FleetContext(self.pool, self._frontend, self._cost_model, now,
+                            self.suite)
 
-    def _scale_to_zero(self):
-        """Lazy TTL enforcement + budget-pressure eviction (LRU)."""
-        now = self._now()
-        for name, e in list(self.engines.items()):
-            if e.warm and now - self.warm_since.get(name, now) > self.ttl_s:
-                self._release(name)
-        while self._warm_gb() > self.memory_budget_gb:
-            warm = [n for n, e in self.engines.items() if e.warm]
-            if not warm:
+    # ------------------------------------------------------------------ #
+    def _scale_to_zero(self, now: float):
+        """Lazy TTL enforcement + budget-pressure eviction in policy order."""
+        for replica in list(self.pool.replicas.values()):
+            c = replica.container
+            if c.state == ContainerState.WARM_IDLE and now >= c.expiry:
+                self.autoscaler.on_expire(c, now, now - c.warm_since)
+                self._release(replica, now)
+        self._reclaim(now, 0.0)
+
+    def _reclaim(self, now: float, need_mb: float):
+        """Evict warm replicas in policy order until ``need_mb`` fits."""
+        while self.pool.free_mb(0) < need_mb:
+            order = self.autoscaler.evict_order(self._ctx(now))
+            if not order:
                 break
-            lru = min(warm, key=lambda n: self.engines[n].last_used)
-            self._release(lru)
+            self._release(self.pool.replica_for(order[0]), now)
 
-    def _release(self, name: str):
-        e = self.engines.get(name)
-        if e and e.warm:
-            idle = self._now() - self.warm_since.get(name, self._now())
-            self.ledger.add_idle(max(idle, 0.0), self.functions[name].memory_gb)
-            e.shutdown()
+    def _release(self, replica: Replica, now: float):
+        c = replica.container
+        if c.state == ContainerState.WARM_IDLE:
+            self.ledger.add_idle(max(now - c.warm_since, 0.0),
+                                 c.memory_mb / 1024.0)
+        self.pool.release(replica)
 
     # ------------------------------------------------------------------ #
     def invoke(self, name: str, tokens: Optional[np.ndarray] = None,
                extras=None) -> Tuple[np.ndarray, RequestRecord]:
         fdef = self.functions[name]
-        self._scale_to_zero()
         arrival = self._now()
-        e = self.engines.get(name)
+        self.autoscaler.observe_arrival(name, arrival)
+        self._scale_to_zero(arrival)
+        ctx = self._ctx(arrival)
         breakdown: Optional[Breakdown] = None
         cold = False
-        if e is None:
-            e = InferenceEngine(fdef.arch, smoke=True, max_seq=fdef.max_seq,
-                                batch=fdef.batch, store=self.store)
-            self.engines[name] = e
-        if not e.warm:
-            cold = True
-            breakdown = e.cold_start(from_snapshot=self.use_snapshots)
+        c = self.suite.placement.choose_container(name, ctx)
+        if c is not None:
+            replica = self.pool.replica_for(c)
+            idle = arrival - c.warm_since
+            self.ledger.add_idle(max(idle, 0.0), c.memory_mb / 1024.0)
+            self.autoscaler.on_reuse(c, ctx, idle)
         else:
-            # account idle window that just ended
-            self.ledger.add_idle(arrival - self.warm_since.get(name, arrival),
-                                 fdef.memory_gb)
+            cold = True
+            self.autoscaler.on_miss(name, arrival)
+            fn = self.pool.functions[name]
+            self._reclaim(arrival, fn.memory_mb)
+            replica, breakdown = self.pool.start_replica(
+                name, 0, arrival, from_snapshot=self.use_snapshots)
+            self.ledger.containers_launched += 1
+        c = replica.container
+        c.state = ContainerState.ACTIVE
+        c.uses += 1
+        replica.inflight += 1
         if tokens is None:
             tokens = np.ones((fdef.batch, fdef.max_seq), np.int32)
         start = self._now()
-        out, stats = e.serve(tokens, decode_steps=fdef.decode_steps,
-                             extras=extras)
+        out, _ = self.backend.serve(replica, tokens,
+                                    decode_steps=fdef.decode_steps,
+                                    extras=extras)
         end = self._now()
-        self.warm_since[name] = end
+        replica.inflight -= 1
+        c.state = ContainerState.WARM_IDLE
+        c.warm_since = end
+        c.last_used = end
+        c.expiry = end + self.autoscaler.ttl_for(c, self._ctx(end))
         rec = RequestRecord(name, arrival, start, end, cold=cold,
                             startup=breakdown)
         self.ledger.record(rec, memory_gb=fdef.memory_gb)

@@ -1,0 +1,220 @@
+"""Fleet subsystem tests — all on the virtual clock (fast, deterministic):
+replay invariants, sim-vs-fleet schema parity, cold-rate ordering between
+no-prewarm and histogram-prewarm, micro-batch shape grouping, concurrency
+slots, admission control, and the clock abstraction itself."""
+import numpy as np
+import pytest
+
+from repro.core.policies import suite
+from repro.core.policies.keepalive import FixedTTL
+from repro.core.simulator import simulate
+from repro.core.workload import azure_like, flash_crowd, poisson, rare
+from repro.fleet import (AdmissionConfig, FleetConfig, FleetRunner, Frontend,
+                         Request, VirtualClock, WallClock, replay)
+
+
+# --------------------------------------------------------------------------- #
+# clock
+# --------------------------------------------------------------------------- #
+
+
+def test_virtual_clock_teleports():
+    c = VirtualClock()
+    c.sleep_until(1e6)
+    assert c.now() == 1e6
+    c.sleep_until(5.0)          # never goes backwards
+    assert c.now() == 1e6
+
+
+def test_wall_clock_scales():
+    import time
+    c = WallClock(speed=100.0)
+    t0 = time.monotonic()
+    c.sleep_until(c.now() + 50.0)   # 50 logical s = 0.5 real s
+    real = time.monotonic() - t0
+    assert 0.3 <= real <= 2.0
+
+
+# --------------------------------------------------------------------------- #
+# replay invariants
+# --------------------------------------------------------------------------- #
+
+FAST_POLICIES = ["cold_always", "provider_default", "provider_short",
+                 "prewarm_histogram", "rl_keepalive", "faascache",
+                 "snapshot_restore", "cas", "hybrid_prewarm"]
+
+
+@pytest.mark.parametrize("policy", FAST_POLICIES)
+def test_replay_invariants(policy):
+    tr = poisson(rate=0.5, horizon=120.0, num_functions=4, seed=0)
+    runner = FleetRunner(tr, suite(policy))
+    led = runner.run()
+    # conservation: completed + dropped + still queued == arrivals
+    assert (len(led.records) + led.dropped + runner.frontend.total_queued
+            == len(tr.invocations))
+    for r in led.records:
+        assert r.end >= r.start >= r.arrival >= 0
+        if r.cold:
+            assert r.startup is not None and r.startup.total > 0
+    assert led.idle_gb_s >= 0
+    for used in runner.pool.worker_used:
+        assert -1e-6 <= used <= runner.cfg.worker_memory_mb + 1e-6
+
+
+def test_replay_deterministic():
+    tr = azure_like(300.0, num_functions=10, seed=7)
+    s1 = replay(tr, suite("prewarm_histogram")).summary()
+    s2 = replay(tr, suite("prewarm_histogram")).summary()
+    assert s1 == s2
+
+
+def test_cold_always_vs_warm():
+    tr = poisson(rate=1.0, horizon=120.0, num_functions=1, seed=0)
+    assert replay(tr, suite("cold_always")).summary()[
+        "cold_start_frequency"] == 1.0
+    assert replay(tr, suite("provider_default")).summary()[
+        "cold_start_frequency"] < 0.05
+
+
+# --------------------------------------------------------------------------- #
+# sim-vs-fleet: identical schema, comparable numbers (acceptance criterion)
+# --------------------------------------------------------------------------- #
+
+
+def test_sim_and_fleet_summaries_share_schema():
+    tr = poisson(rate=0.5, horizon=120.0, num_functions=4, seed=0)
+    sim_s = simulate(tr, suite("provider_default")).summary()
+    fleet_s = replay(tr, suite("provider_default")).summary()
+    assert set(sim_s) == set(fleet_s)
+    # default fleet config matches simulator semantics (concurrency=1, same
+    # cost model), so headline metrics must agree closely
+    assert sim_s["requests"] == fleet_s["requests"]
+    assert sim_s["cold_starts"] == fleet_s["cold_starts"]
+    assert abs(sim_s["latency_p95_s"] - fleet_s["latency_p95_s"]) < 0.05
+
+
+# --------------------------------------------------------------------------- #
+# cold-rate ordering: predictive prewarm beats no-prewarm on periodic traces
+# --------------------------------------------------------------------------- #
+
+
+def test_histogram_prewarm_beats_no_prewarm_on_periodic_trace():
+    tr = rare(inter_arrival=150.0, horizon=3000.0, jitter=0.05,
+              num_functions=2, seed=5)
+    fixed = replay(tr, suite("provider_short")).summary()
+    pred = replay(tr, suite("prewarm_histogram")).summary()
+    assert pred["cold_start_frequency"] < fixed["cold_start_frequency"]
+
+
+def test_predictive_policy_dominates_fixed_ttl_on_azure_trace():
+    """The bench_fleet acceptance setting, pinned: predictor-driven prewarm
+    with a shortened keep-alive must beat fixed TTL on cold-start rate at
+    equal-or-lower idle GB-s on the smoke-sized azure_like config."""
+    tr = azure_like(600.0, num_functions=20, seed=11)
+    cfg = FleetConfig(num_workers=4, worker_memory_mb=16_384.0)
+    fixed = replay(tr, suite("provider_short"), cfg=cfg).summary()
+    pred = replay(tr, suite("hybrid_prewarm", keepalive=FixedTTL(50.0)),
+                  cfg=FleetConfig(num_workers=4,
+                                  worker_memory_mb=16_384.0)).summary()
+    assert pred["cold_start_frequency"] < fixed["cold_start_frequency"]
+    assert pred["idle_gb_s"] <= fixed["idle_gb_s"]
+
+
+# --------------------------------------------------------------------------- #
+# micro-batching
+# --------------------------------------------------------------------------- #
+
+
+def test_frontend_take_batch_groups_by_shape():
+    fe = Frontend(AdmissionConfig())
+    seqs = [16, 32, 16, 16, 64, 16]
+    for i, s in enumerate(seqs):
+        fe.submit(Request(id=i, function="f", arrival=float(i), seq_len=s))
+    batch = fe.take_batch("f", now=10.0, max_n=8)
+    # head is seq 16; all seq-16 requests join, others keep their position
+    assert [r.id for r in batch] == [0, 2, 3, 5]
+    assert all(r.seq_len == 16 for r in batch)
+    rest = fe.take_batch("f", now=10.0, max_n=8)
+    assert [r.id for r in rest] == [1]          # seq-32 head, 64 stays
+    assert fe.take_batch("f", now=10.0, max_n=8)[0].id == 4
+
+
+def test_micro_batching_collapses_flash_crowd_queue():
+    tr = flash_crowd(base_rate=0.5, spike_rate=40.0, horizon=120.0,
+                     num_functions=2, seed=1)
+    small = FleetConfig(num_workers=2, worker_memory_mb=4096.0)
+    batched = FleetConfig(num_workers=2, worker_memory_mb=4096.0, max_batch=8)
+    p95_serial = replay(tr, suite("provider_default"), cfg=small).summary()[
+        "latency_p95_s"]
+    p95_batched = replay(tr, suite("provider_default"), cfg=batched).summary()[
+        "latency_p95_s"]
+    assert p95_batched < p95_serial / 2
+
+
+def test_batched_replay_conserves_requests():
+    tr = flash_crowd(base_rate=0.5, spike_rate=40.0, horizon=120.0,
+                     num_functions=2, seed=1)
+    cfg = FleetConfig(num_workers=2, worker_memory_mb=4096.0, max_batch=8,
+                      vary_shapes=True)
+    runner = FleetRunner(tr, suite("provider_default"), cfg=cfg)
+    led = runner.run()
+    assert (len(led.records) + led.dropped + runner.frontend.total_queued
+            == len(tr.invocations))
+    # shape compatibility: every batch shares one seq_len -> records exist
+    assert len(led.records) == len(tr.invocations)
+
+
+# --------------------------------------------------------------------------- #
+# concurrency slots + admission control
+# --------------------------------------------------------------------------- #
+
+
+def test_concurrency_slots_raise_throughput():
+    tr = flash_crowd(base_rate=0.5, spike_rate=40.0, horizon=120.0,
+                     num_functions=2, seed=1)
+    serial = FleetConfig(num_workers=2, worker_memory_mb=4096.0)
+    slotted = FleetConfig(num_workers=2, worker_memory_mb=4096.0,
+                          slots_per_replica=4)
+    p95_1 = replay(tr, suite("provider_default"), cfg=serial).summary()[
+        "latency_p95_s"]
+    p95_4 = replay(tr, suite("provider_default"), cfg=slotted).summary()[
+        "latency_p95_s"]
+    assert p95_4 < p95_1
+
+
+def test_slo_admission_sheds_instead_of_serving_late():
+    tr = flash_crowd(base_rate=0.5, spike_rate=40.0, horizon=120.0,
+                     num_functions=2, seed=1)
+    cfg = FleetConfig(num_workers=2, worker_memory_mb=4096.0,
+                      slo_latency_s=5.0)
+    runner = FleetRunner(tr, suite("provider_default"), cfg=cfg)
+    led = runner.run()
+    assert led.dropped > 0
+    assert runner.frontend.drops.by_reason.get("deadline", 0) > 0
+    assert (len(led.records) + led.dropped + runner.frontend.total_queued
+            == len(tr.invocations))
+
+
+def test_queue_bound_sheds_at_the_door():
+    tr = flash_crowd(base_rate=0.5, spike_rate=40.0, horizon=120.0,
+                     num_functions=1, seed=1)
+    cfg = FleetConfig(num_workers=1, worker_memory_mb=1024.0,
+                      max_queue_per_function=5)
+    runner = FleetRunner(tr, suite("provider_default"), cfg=cfg)
+    led = runner.run()
+    assert runner.frontend.drops.by_reason.get("queue_full", 0) > 0
+    assert (len(led.records) + led.dropped + runner.frontend.total_queued
+            == len(tr.invocations))
+
+
+# --------------------------------------------------------------------------- #
+# chains cascade through the fleet like through the simulator
+# --------------------------------------------------------------------------- #
+
+
+def test_chain_cascade():
+    from repro.core.workload import chains
+    tr = chains(rate=0.2, horizon=120.0, chain_len=3, seed=2)
+    led = replay(tr, suite("provider_default"))
+    # every trace invocation fans out into chain_len records
+    assert len(led.records) == 3 * len(tr.invocations)

@@ -1,0 +1,60 @@
+"""Hypothesis property tests over random workloads and policies
+(assignment requirement).  Kept separate from tests/test_simulator.py so
+the plain simulator invariant tests still run when the optional
+``hypothesis`` dependency is absent — this module skips as a whole."""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.metrics import QoSLedger
+from repro.core.policies import suite
+from repro.core.simulator import Simulator
+from repro.core.workload import bursty, poisson
+
+FAST_POLICIES = ["cold_always", "provider_default", "snapshot_restore",
+                 "faascache", "pause_pool", "cas", "prewarm_histogram",
+                 "rl_keepalive", "beyond_combo"]
+
+
+def _check_invariants(trace, led: QoSLedger, sim: Simulator):
+    n_inv = len(trace.invocations)
+    # conservation: every invocation either completed or was dropped/queued
+    assert len(led.records) + led.dropped + len(sim.queue) == n_inv
+    # cold starts cannot exceed container launches
+    colds = sum(1 for r in led.records if r.cold)
+    assert colds <= led.containers_launched
+    # time sanity
+    for r in led.records:
+        assert r.end >= r.start >= r.arrival >= 0
+        if r.cold:
+            assert r.startup is not None and r.startup.total > 0
+    # accounting sanity
+    assert led.idle_gb_s >= 0 and led.exec_gb_s > 0 or n_inv == 0
+    # memory accounting: nothing negative, nothing beyond capacity
+    for used in sim.worker_used:
+        assert -1e-6 <= used <= sim.cfg.worker_memory_mb + 1e-6
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    rate=st.floats(0.02, 2.0),
+    num_fns=st.integers(1, 12),
+    policy=st.sampled_from(FAST_POLICIES),
+)
+def test_invariants_poisson(seed, rate, num_fns, policy):
+    tr = poisson(rate=rate, horizon=120.0, num_functions=num_fns, seed=seed)
+    sim = Simulator(tr, suite(policy))
+    led = sim.run()
+    _check_invariants(tr, led, sim)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000), policy=st.sampled_from(FAST_POLICIES))
+def test_invariants_bursty(seed, policy):
+    tr = bursty(base_rate=0.05, burst_rate=5.0, horizon=120.0,
+                num_functions=4, seed=seed)
+    sim = Simulator(tr, suite(policy))
+    led = sim.run()
+    _check_invariants(tr, led, sim)
