@@ -100,6 +100,30 @@ def run(emit):
         emit(f"fleet/calibration/{key}", abs(delta) * 1e6,
              f"sim={sim_s[key]:.4f} fleet={fleet_s[key]:.4f}")
 
+    # -- 3b. scenario calibration: the kernel-backed scenarios must also
+    #        replay ledger-identically (concurrency>1, heterogeneous
+    #        workers) — same trace through both drivers, delta per metric - #
+    from repro.core.workload import flash_crowd as _fc, poisson as _poisson
+    scenarios = {
+        "concurrency4": (
+            _fc(base_rate=0.5, spike_rate=30.0, horizon=120.0,
+                num_functions=2, seed=1, container_concurrency=4),
+            dict(num_workers=2, worker_memory_mb=4096.0)),
+        "heterogeneous": (
+            _poisson(rate=2.0, horizon=200.0, num_functions=6, seed=3),
+            dict(num_workers=3, worker_memory_mb=[8192.0, 4096.0, 2048.0],
+                 worker_speed=[1.0, 0.5, 2.0])),
+    }
+    for label, (trace, kw) in scenarios.items():
+        sim_s = simulate(trace, suite("provider_default"), cost_model=cm,
+                         cfg=SimConfig(**kw)).summary()
+        fleet_s = replay(trace, suite("provider_default"), cost_model=cm,
+                         cfg=FleetConfig(**kw)).summary()
+        for key in ("latency_p95_s", "cold_start_frequency", "idle_gb_s"):
+            delta = fleet_s[key] - sim_s[key]
+            emit(f"fleet/calibration_{label}/{key}", abs(delta) * 1e6,
+                 f"sim={sim_s[key]:.4f} fleet={fleet_s[key]:.4f}")
+
     # -- 4. acceptance gate: predictor-driven dominates fixed TTL --------- #
     tr = TRACES["azure_like"]()
     fixed = replay(tr, suite("provider_short"), cost_model=cm,

@@ -1,0 +1,102 @@
+"""Simulator replay-throughput microbenchmark (the perf trajectory's data
+points).
+
+Replays an ``azure_like`` trace through ``core.simulator.simulate`` under the
+provider-default policy at increasing function counts and reports **events
+per second** (processed invocations / wall-clock).  The cluster is sized so
+(nearly) every function can stay warm: that makes the warm-container
+registry large, which is exactly the regime where per-arrival
+O(all-containers) scans drown the event loop and where the indexed
+``ClusterState`` kernel pays off.
+
+Outputs:
+  * ``emit("simcore/azure_like/<n>fns/events_per_s", ...)`` rows via
+    ``benchmarks/run.py``;
+  * ``BENCH_simcore.json`` in the CWD — one record per scale, so successive
+    runs give the events/sec trajectory over time.
+
+CLI:
+  ``python benchmarks/bench_simcore.py``            full sweep (100/500/2000)
+  ``python benchmarks/bench_simcore.py --smoke``    100-function quick check
+    with a conservative throughput floor — a CI tripwire for O(n) regressions
+    in the dispatch path, not a precise measurement.
+"""
+import json
+import sys
+import time
+
+from repro.core.policies import suite
+from repro.core.simulator import SimConfig, simulate
+from repro.core.workload import azure_like
+
+# (num_functions, horizon_s): horizons shrink as rates grow so every scale
+# replays a comparable number of invocations (~15-25k).
+SCALES = ((100, 360.0), (500, 75.0), (2000, 20.0))
+SMOKE_SCALE = (100, 45.0)
+
+# --smoke floor (events/sec).  Post-kernel the 100-function scale runs well
+# above 10^4 eps even on slow CI machines; the pre-kernel linear-scan
+# simulator sat around 10^3 at this scale, so 2_000 is a cliff detector
+# with wide machine-variance margin, not a tight bound.
+SMOKE_FLOOR_EPS = 2_000.0
+
+NUM_WORKERS = 8
+
+
+def _cfg(num_functions: int) -> SimConfig:
+    # enough memory that ~every function can hold one warm container
+    per_worker_mb = 1024.0 * num_functions / NUM_WORKERS * 1.25
+    return SimConfig(num_workers=NUM_WORKERS,
+                     worker_memory_mb=max(per_worker_mb, 16_384.0))
+
+
+def _one(num_functions: int, horizon: float) -> dict:
+    tr = azure_like(horizon, num_functions=num_functions, seed=11)
+    t0 = time.perf_counter()
+    led = simulate(tr, suite("provider_default"), cfg=_cfg(num_functions))
+    wall = time.perf_counter() - t0
+    n_inv = len(tr.invocations)
+    return {
+        "functions": num_functions,
+        "horizon_s": horizon,
+        "invocations": n_inv,
+        "records": len(led.records),
+        "wall_s": wall,
+        "events_per_s": n_inv / wall if wall else float("inf"),
+    }
+
+
+def run(emit, *, scales=SCALES, json_path="BENCH_simcore.json"):
+    results = []
+    for n, horizon in scales:
+        r = _one(n, horizon)
+        results.append(r)
+        emit(f"simcore/azure_like/{n}fns/events_per_s", r["events_per_s"],
+             f"inv={r['invocations']} wall={r['wall_s']:.2f}s")
+    with open(json_path, "w") as f:
+        json.dump(results, f, indent=2)
+    return results
+
+
+def main() -> int:
+    smoke = "--smoke" in sys.argv
+
+    def emit(name, value, derived=""):
+        print(f"{name},{value:.1f},{derived}", flush=True)
+
+    if smoke:
+        results = run(emit, scales=(SMOKE_SCALE,),
+                      json_path="BENCH_simcore_smoke.json")
+        eps = results[0]["events_per_s"]
+        if eps < SMOKE_FLOOR_EPS:
+            print(f"FAIL: smoke throughput {eps:.0f} events/s is below the "
+                  f"{SMOKE_FLOOR_EPS:.0f} floor — dispatch-path regression?")
+            return 1
+        print(f"ok: {eps:.0f} events/s >= {SMOKE_FLOOR_EPS:.0f} floor")
+        return 0
+    run(emit)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -9,6 +9,8 @@ Prints ``name,us_per_call,derived`` CSV.  Modules:
   bench_serving    serving microbenchmarks + compile-time (scan vs unroll)
   bench_fleet      fleet replay: predictive autoscaling vs fixed TTL + the
                    sim-vs-fleet calibration loop (virtual clock)
+  bench_simcore    simulator replay throughput (events/sec vs function
+                   count; writes BENCH_simcore.json — the perf trajectory)
   bench_roofline   dry-run/roofline summary (deliverables e+g)
 """
 import sys
@@ -17,7 +19,7 @@ import traceback
 
 from benchmarks import (bench_csf, bench_csl, bench_factors, bench_fleet,
                         bench_platforms, bench_qos, bench_roofline,
-                        bench_serving, bench_tradeoffs)
+                        bench_serving, bench_simcore, bench_tradeoffs)
 
 MODULES = [
     ("factors", bench_factors),
@@ -28,6 +30,7 @@ MODULES = [
     ("platforms", bench_platforms),
     ("serving", bench_serving),
     ("fleet", bench_fleet),
+    ("simcore", bench_simcore),
     ("roofline", bench_roofline),
 ]
 

@@ -1,0 +1,608 @@
+"""Shared cluster-runtime kernel: the ONE place container state lives.
+
+Before this module existed the cluster semantics the paper's taxonomy is
+evaluated against — the container FSM, keep-warm window τ, memory-pressure
+eviction, idle/exec GB-s accounting — were maintained twice: once inside
+``core/simulator.py`` and once across ``fleet/pool.py`` +
+``fleet/autoscaler.py``.  Every policy or semantics change had to be made in
+both places, and sim-vs-fleet calibration held only by accident.  Off-policy
+RL keep-alive and SPES-style trade-off tuning additionally require the
+*state representation* a policy learns on to be identical to the one it is
+deployed on; a shared kernel makes that structural.
+
+This module owns:
+
+  * :class:`ClusterState` — the indexed container registry.  Per-function
+    warm-idle maps, a global warm-idle set, per-function spare-concurrency
+    maps, per-function active counts, per-worker provisioning counts, and
+    running per-worker / warm-idle memory totals make every hot-path query
+    (``warm_idle``, ``free_slot``, ``active_count``, ``free_mb``,
+    ``pressure``) O(1) or O(k) in the *relevant* containers instead of
+    O(all containers) linear scans.  All FSM transitions
+    (PROVISIONING → WARM_IDLE ⇄ ACTIVE → DEAD) go through one private
+    ``_transition`` so the indexes can never drift from the authoritative
+    ``Container.state`` — drivers never assign ``container.state``
+    themselves.
+  * :class:`ClusterContext` — the single read-only policy view (``Context``
+    protocol) that :mod:`repro.core.policies` consume; the simulator's
+    ``SimContext`` and the fleet's ``FleetContext`` are thin aliases.
+  * :class:`PolicyDriver` — shared policy-feedback plumbing (prewarm
+    observation, RL keep-alive tombstone resolution) used verbatim by the
+    simulator and subclassed by the fleet's ``Autoscaler``.
+  * One shared :class:`~repro.core.metrics.QoSLedger` accounting path:
+    idle GB-s on reuse/evict/close-out, exec GB-s split across concurrency
+    slots and micro-batch members, container-launch counts.
+
+Heterogeneity and concurrency both live here so every driver gets them for
+free: workers may carry per-worker memory capacities and speed factors
+(``worker_memory_mb`` / ``worker_speed`` accept scalars or sequences), and a
+container admits up to ``Container.concurrency`` simultaneous executions
+(Knative-style ``FunctionSpec.container_concurrency``).
+
+The simulator advances a :class:`ClusterState` by event heap, the fleet by
+clock; given the same trace, policy suite, and cost model the two produce
+identical ledgers (pinned by ``tests/test_cluster.py`` and the
+``bench_fleet.py`` calibration gate).
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+from typing import (Callable, Dict, List, Optional, Sequence, Tuple, Union)
+
+from repro.core.costmodel import CostModel
+from repro.core.lifecycle import (Breakdown, Container, ContainerState,
+                                  FunctionSpec)
+from repro.core.metrics import QoSLedger, RequestRecord
+
+Scalar = Union[float, int]
+
+
+def _per_worker(value, num_workers: int, what: str) -> List[float]:
+    """Broadcast a scalar or validate a per-worker sequence."""
+    if isinstance(value, (int, float)):
+        return [float(value)] * num_workers
+    out = [float(v) for v in value]
+    if len(out) != num_workers:
+        raise ValueError(f"{what} has {len(out)} entries for "
+                         f"{num_workers} workers")
+    return out
+
+
+def scale_breakdown(bd: Breakdown, speed: float) -> Breakdown:
+    """Apply a worker speed factor to a startup breakdown (1.0 = identity,
+    returned unchanged so default-config replays stay bit-identical)."""
+    if speed == 1.0:
+        return bd
+    inv = 1.0 / speed
+    return Breakdown({p: s * inv for p, s in bd.seconds.items()})
+
+
+class ClusterState:
+    """Indexed container registry + the single FSM transition function.
+
+    Drivers (simulator event loop, fleet runner, serving router) call the
+    lifecycle operations — :meth:`admit`, :meth:`acquire`,
+    :meth:`release_slot`, :meth:`to_idle`, :meth:`set_expiry`,
+    :meth:`destroy` — and read the indexed queries; they never mutate
+    ``Container`` state or memory accounting directly.
+    """
+
+    def __init__(self, functions: Dict[str, FunctionSpec], *,
+                 num_workers: int = 4,
+                 worker_memory_mb: Union[Scalar, Sequence[Scalar]] = 16_384.0,
+                 worker_speed: Union[Scalar, Sequence[Scalar]] = 1.0,
+                 ledger: Optional[QoSLedger] = None,
+                 default_concurrency: int = 1,
+                 on_destroy: Optional[Callable[[Container], None]] = None):
+        self.functions = functions
+        self.num_workers = num_workers
+        self.worker_memory = _per_worker(worker_memory_mb, num_workers,
+                                         "worker_memory_mb")
+        self.worker_speed = _per_worker(worker_speed, num_workers,
+                                        "worker_speed")
+        self.ledger = ledger if ledger is not None else QoSLedger()
+        self.default_concurrency = default_concurrency
+        self.on_destroy = on_destroy
+        self.now = 0.0
+
+        self.containers: Dict[int, Container] = {}
+        self.snapshots: set = set()          # functions with a snapshot baked
+        self.worker_used: List[float] = [0.0] * num_workers
+        self._reserved: List[float] = [0.0] * num_workers
+        self._next_cid = 0
+        # ---- indexes (all maintained exclusively by _transition & co) ---- #
+        self._warm_by_fn: Dict[str, Dict[int, Container]] = defaultdict(dict)
+        self._idle_all: Dict[int, Container] = {}
+        self._spare_by_fn: Dict[str, Dict[int, Container]] = defaultdict(dict)
+        self._active_count: Dict[str, int] = defaultdict(int)
+        self._prov_by_worker: Dict[int, int] = defaultdict(int)
+        self._warm_idle_mb = 0.0
+        self._used_mb = 0.0
+        self._expiry_stamp: Dict[int, float] = {}
+
+    # ------------------------------------------------------------------ #
+    # derived capacity
+    # ------------------------------------------------------------------ #
+    @property
+    def total_memory_mb(self) -> float:
+        return sum(self.worker_memory)
+
+    @property
+    def capacity_gb(self) -> float:
+        return self.total_memory_mb / 1024.0
+
+    def speed(self, worker: int) -> float:
+        return self.worker_speed[worker]
+
+    def memory_of(self, worker: int) -> float:
+        return self.worker_memory[worker]
+
+    def free_mb(self, worker: int) -> float:
+        return self.worker_memory[worker] - self.worker_used[worker]
+
+    def used_mb(self, worker: Optional[int] = None) -> float:
+        """Running memory-in-use total (O(1); no scan)."""
+        return self._used_mb if worker is None else self.worker_used[worker]
+
+    def pressure(self, worker: Optional[int] = None) -> float:
+        """Fraction of (worker or cluster) memory in use — O(1)."""
+        cap = (self.total_memory_mb if worker is None
+               else self.worker_memory[worker])
+        return self.used_mb(worker) / cap if cap else 0.0
+
+    def warm_idle_mb(self) -> float:
+        """Total MB held by warm-idle containers (running counter)."""
+        return self._warm_idle_mb
+
+    def reserve(self, worker: int, mb: float) -> None:
+        """Static reservation (e.g. a pause pool's footprint) — counted in
+        per-worker usage but not tied to any container."""
+        self.worker_used[worker] += mb
+        self._used_mb += mb
+        self._reserved[worker] += mb
+
+    # ------------------------------------------------------------------ #
+    # indexed queries
+    # ------------------------------------------------------------------ #
+    def warm_idle(self, function: str) -> List[Container]:
+        """Warm-idle containers for ``function`` in registry (cid) order."""
+        d = self._warm_by_fn.get(function)
+        if not d:
+            return []
+        return [d[k] for k in sorted(d)]
+
+    def all_warm_idle(self) -> List[Container]:
+        """Every warm-idle container in registry (cid) order."""
+        return [self._idle_all[k] for k in sorted(self._idle_all)]
+
+    def free_slot(self, function: str) -> Optional[Container]:
+        """An ACTIVE container for ``function`` with a spare concurrency
+        slot; least-loaded wins, ties to the oldest container."""
+        d = self._spare_by_fn.get(function)
+        if not d:
+            return None
+        best = None
+        for k in sorted(d):
+            c = d[k]
+            if best is None or c.inflight < best.inflight:
+                best = c
+        return best
+
+    def active_count(self, function: str) -> int:
+        """ACTIVE + PROVISIONING containers for ``function`` — O(1)."""
+        return self._active_count.get(function, 0)
+
+    def provisioning_on(self, worker: int) -> int:
+        """Concurrent cold starts in flight on ``worker`` — O(1)."""
+        return self._prov_by_worker.get(worker, 0)
+
+    # ------------------------------------------------------------------ #
+    # the FSM transition function (the only place container.state changes)
+    # ------------------------------------------------------------------ #
+    def _transition(self, c: Container, new: ContainerState) -> None:
+        old = c.state
+        if old == new:
+            return
+        if old == ContainerState.PROVISIONING:
+            self._prov_by_worker[c.worker] -= 1
+        elif old == ContainerState.WARM_IDLE:
+            self._warm_by_fn[c.function].pop(c.id, None)
+            self._idle_all.pop(c.id, None)
+            self._warm_idle_mb -= c.memory_mb
+        elif old == ContainerState.ACTIVE:
+            self._spare_by_fn[c.function].pop(c.id, None)
+        if old in (ContainerState.PROVISIONING, ContainerState.ACTIVE) and \
+                new not in (ContainerState.PROVISIONING, ContainerState.ACTIVE):
+            self._active_count[c.function] -= 1
+        if new in (ContainerState.PROVISIONING, ContainerState.ACTIVE) and \
+                old not in (ContainerState.PROVISIONING, ContainerState.ACTIVE):
+            self._active_count[c.function] += 1
+
+        c.state = new
+
+        if new == ContainerState.PROVISIONING:
+            self._prov_by_worker[c.worker] += 1
+        elif new == ContainerState.WARM_IDLE:
+            self._warm_by_fn[c.function][c.id] = c
+            self._idle_all[c.id] = c
+            self._warm_idle_mb += c.memory_mb
+        elif new == ContainerState.ACTIVE:
+            self._update_spare(c)
+
+    def _update_spare(self, c: Container) -> None:
+        d = self._spare_by_fn[c.function]
+        if c.state == ContainerState.ACTIVE and c.inflight < c.concurrency:
+            d[c.id] = c
+        else:
+            d.pop(c.id, None)
+
+    # ------------------------------------------------------------------ #
+    # lifecycle operations
+    # ------------------------------------------------------------------ #
+    def concurrency_for(self, fn: FunctionSpec) -> int:
+        return max(self.default_concurrency, fn.container_concurrency)
+
+    def admit(self, function: str, worker: int, now: float, *,
+              has_snapshot: bool = False) -> Container:
+        """Place a new PROVISIONING container on ``worker`` (cold start)."""
+        fn = self.functions[function]
+        cid = self._next_cid
+        self._next_cid += 1
+        c = Container(id=cid, function=function,
+                      state=ContainerState.PROVISIONING, worker=worker,
+                      memory_mb=fn.memory_mb, created_at=now,
+                      has_snapshot=has_snapshot,
+                      concurrency=self.concurrency_for(fn))
+        self.containers[cid] = c
+        self.worker_used[worker] += fn.memory_mb
+        self._used_mb += fn.memory_mb
+        self._prov_by_worker[worker] += 1
+        self._active_count[function] += 1
+        self.ledger.containers_launched += 1
+        return c
+
+    def acquire(self, c: Container, now: float, *,
+                sanitized: Optional[bool] = None) -> float:
+        """Begin one execution on ``c`` — warm reuse (WARM_IDLE → ACTIVE,
+        closing out the idle interval), a concurrency-slot join on an
+        already-ACTIVE container, or provisioning completion.  Returns the
+        idle seconds burned (0.0 unless this was a warm reuse)."""
+        idle_s = 0.0
+        if c.state == ContainerState.WARM_IDLE:
+            idle_s = now - c.warm_since
+            self.ledger.add_idle(idle_s, c.memory_mb / 1024.0)
+        self._transition(c, ContainerState.ACTIVE)
+        c.inflight += 1
+        c.uses += 1
+        c.last_used = now
+        if sanitized is not None:
+            c.sanitized = sanitized
+        self._update_spare(c)
+        return idle_s
+
+    def release_slot(self, c: Container, now: float) -> bool:
+        """End one execution; True iff the container drained (inflight=0)
+        and should transition to WARM_IDLE via :meth:`to_idle`."""
+        c.inflight -= 1
+        self._update_spare(c)
+        return c.inflight == 0
+
+    def to_idle(self, c: Container, now: float) -> None:
+        """ACTIVE/PROVISIONING → WARM_IDLE (the keep-warm window opens)."""
+        self._transition(c, ContainerState.WARM_IDLE)
+        c.warm_since = now
+        c.last_used = now
+
+    def set_expiry(self, c: Container, expiry: float) -> float:
+        """Arm the scale-to-zero deadline; returns the stamp drivers pass
+        back to :meth:`expiry_valid` (reuse supersedes old stamps)."""
+        c.expiry = expiry
+        self._expiry_stamp[c.id] = expiry
+        return expiry
+
+    def expiry_valid(self, cid: int, stamp: float) -> Optional[Container]:
+        """The container iff it is still warm-idle under this exact stamp
+        (None when the expiry was superseded by a reuse or a destroy)."""
+        c = self.containers.get(cid)
+        if c is None or c.state != ContainerState.WARM_IDLE:
+            return None
+        if self._expiry_stamp.get(cid) != stamp:
+            return None
+        return c
+
+    def destroy(self, c: Container, now: float) -> None:
+        """Scale-to-zero / eviction: close idle accounting, free memory,
+        drop from every index, fire the driver's teardown hook."""
+        if c.state == ContainerState.WARM_IDLE:
+            self.ledger.add_idle(now - c.warm_since, c.memory_mb / 1024.0)
+        self._transition(c, ContainerState.DEAD)
+        self.worker_used[c.worker] -= c.memory_mb
+        self._used_mb -= c.memory_mb
+        self.containers.pop(c.id, None)
+        self._expiry_stamp.pop(c.id, None)
+        if self.on_destroy is not None:
+            self.on_destroy(c)
+
+    # ------------------------------------------------------------------ #
+    # the shared QoS accounting path
+    # ------------------------------------------------------------------ #
+    def record_execution(self, c: Container,
+                         items: Sequence[Tuple[str, float]],
+                         start: float, end: float, *, cold: bool,
+                         bd: Optional[Breakdown] = None) -> None:
+        """Record one (possibly micro-batched) execution on one slot of
+        ``c``.  The container footprint is statically partitioned across
+        its concurrency slots and a micro-batch further splits its slot's
+        share, so summed exec GB-s never exceeds container-seconds even
+        with overlapping slot executions."""
+        mem_gb = c.memory_mb / 1024.0 / c.concurrency / len(items)
+        for fn_name, arrival in items:
+            rec = RequestRecord(fn_name, arrival, start, end, cold=cold,
+                                startup=bd if cold else None)
+            self.ledger.record(rec, memory_gb=mem_gb)
+
+    def close_out(self, horizon: float) -> None:
+        """End-of-run idle accounting for containers still warm at the
+        horizon."""
+        for c in self.containers.values():
+            if c.state == ContainerState.WARM_IDLE:
+                end = max(horizon, c.warm_since)
+                self.ledger.add_idle(end - c.warm_since,
+                                     c.memory_mb / 1024.0)
+
+    # ------------------------------------------------------------------ #
+    # invariant audit (regression harness for the running counters)
+    # ------------------------------------------------------------------ #
+    def recount(self) -> Dict[str, object]:
+        """Brute-force recomputation of every running counter/index from
+        the authoritative ``containers`` dict — tests compare this against
+        the incrementally-maintained values after long traces."""
+        worker_used = [0.0] * self.num_workers
+        warm_idle_mb = 0.0
+        active: Dict[str, int] = defaultdict(int)
+        prov: Dict[int, int] = defaultdict(int)
+        warm_ids = set()
+        spare_ids = set()
+        for c in self.containers.values():
+            worker_used[c.worker] += c.memory_mb
+            if c.state == ContainerState.WARM_IDLE:
+                warm_idle_mb += c.memory_mb
+                warm_ids.add(c.id)
+            if c.state in (ContainerState.ACTIVE,
+                           ContainerState.PROVISIONING):
+                active[c.function] += 1
+            if c.state == ContainerState.PROVISIONING:
+                prov[c.worker] += 1
+            if (c.state == ContainerState.ACTIVE
+                    and c.inflight < c.concurrency):
+                spare_ids.add(c.id)
+        return {
+            "worker_used": worker_used,
+            "used_mb": sum(worker_used),
+            "warm_idle_mb": warm_idle_mb,
+            "active_count": dict(active),
+            "provisioning": dict(prov),
+            "warm_ids": warm_ids,
+            "spare_ids": spare_ids,
+        }
+
+    def check_counters(self, *, tol: float = 1e-6) -> None:
+        """Assert every running counter matches a brute-force recount
+        (static :meth:`reserve` footprints, which have no backing
+        container, are tracked separately and added back here)."""
+        truth = self.recount()
+        recounted_total = truth["used_mb"] + sum(self._reserved)
+        assert abs(self._used_mb - recounted_total) < tol, \
+            (self._used_mb, recounted_total)
+        assert abs(self._warm_idle_mb - truth["warm_idle_mb"]) < tol, \
+            (self._warm_idle_mb, truth["warm_idle_mb"])
+        for w in range(self.num_workers):
+            assert abs(self.worker_used[w]
+                       - truth["worker_used"][w] - self._reserved[w]) < tol
+        for fn, n in truth["active_count"].items():
+            assert self._active_count.get(fn, 0) == n, fn
+        for fn, n in self._active_count.items():
+            assert truth["active_count"].get(fn, 0) == n, fn
+        for w, n in truth["provisioning"].items():
+            assert self._prov_by_worker.get(w, 0) == n, w
+        for w, n in self._prov_by_worker.items():
+            assert truth["provisioning"].get(w, 0) == n, w
+        assert set(self._idle_all) == truth["warm_ids"]
+        assert {cid for d in self._warm_by_fn.values() for cid in d} \
+            == truth["warm_ids"]
+        assert {cid for d in self._spare_by_fn.values() for cid in d} \
+            == truth["spare_ids"]
+
+
+# --------------------------------------------------------------------------- #
+# shared worker selection under memory pressure
+# --------------------------------------------------------------------------- #
+
+
+def find_worker(state: ClusterState, fn: FunctionSpec, suite,
+                ctx: "ClusterContext") -> Optional[int]:
+    """Pick a worker with room for ``fn``; under pressure, evict warm-idle
+    containers in policy order (computed once, as a batch eviction plan)
+    until the placement policy finds room.  Returns None when even a fully
+    drained cluster cannot host the function right now."""
+    w = suite.placement.choose_worker(fn, ctx)
+    if w is not None:
+        return w
+    for victim in suite.keepalive.evict_order(state.all_warm_idle(), ctx):
+        state.destroy(victim, state.now)
+        w = suite.placement.choose_worker(fn, ctx)
+        if w is not None:
+            return w
+    return None
+
+
+# --------------------------------------------------------------------------- #
+# the one Context protocol
+# --------------------------------------------------------------------------- #
+
+
+class ClusterContext:
+    """The read-only policy view of cluster state — the single ``Context``
+    protocol :mod:`repro.core.policies` and :mod:`repro.core.predictors`
+    see, whether the kernel underneath is advanced by the simulator's event
+    heap or the fleet's clock."""
+
+    __slots__ = ("_state", "_cost_model", "_suite", "_queued", "_now")
+
+    def __init__(self, state: ClusterState, cost_model: CostModel,
+                 suite=None,
+                 queued: Optional[Callable[[str], int]] = None,
+                 now: Optional[float] = None):
+        self._state = state
+        self._cost_model = cost_model
+        self._suite = suite
+        self._queued = queued
+        self._now = now
+
+    # ---- identity ------------------------------------------------------ #
+    @property
+    def now(self) -> float:
+        return self._state.now if self._now is None else self._now
+
+    @property
+    def functions(self) -> Dict[str, FunctionSpec]:
+        return self._state.functions
+
+    @property
+    def cost_model(self) -> CostModel:
+        return self._cost_model
+
+    @property
+    def num_workers(self) -> int:
+        return self._state.num_workers
+
+    # ---- indexed container queries ------------------------------------- #
+    def warm_idle(self, function: str) -> List[Container]:
+        return self._state.warm_idle(function)
+
+    def all_warm_idle(self) -> List[Container]:
+        return self._state.all_warm_idle()
+
+    def free_slot(self, function: str) -> Optional[Container]:
+        return self._state.free_slot(function)
+
+    def free_mb(self, worker: int) -> float:
+        return self._state.free_mb(worker)
+
+    def worker_speed(self, worker: int) -> float:
+        return self._state.speed(worker)
+
+    def active_count(self, function: str) -> int:
+        return self._state.active_count(function)
+
+    def queued_count(self, function: str) -> int:
+        return self._queued(function) if self._queued is not None else 0
+
+    # ---- pressure / utilization (running counters, no scans) ----------- #
+    def used_mb(self, worker: Optional[int] = None) -> float:
+        return self._state.used_mb(worker)
+
+    def pressure(self, worker: Optional[int] = None) -> float:
+        return self._state.pressure(worker)
+
+    def warm_idle_mb(self) -> float:
+        return self._state.warm_idle_mb()
+
+    # ---- cost estimates ------------------------------------------------ #
+    def cold_start_estimate(self, function: str) -> float:
+        fn = self._state.functions[function]
+        from_snap = (self._suite is not None and self._suite.startup.snapshot
+                     and function in self._state.snapshots)
+        return self._cost_model.breakdown(fn, from_snapshot=from_snap).total
+
+
+# --------------------------------------------------------------------------- #
+# shared policy-feedback plumbing (prewarm observation + RL tombstones)
+# --------------------------------------------------------------------------- #
+
+
+class PolicyDriver:
+    """Adapts a :class:`~repro.core.policies.base.PolicySuite` to a running
+    cluster: prewarm observation, per-container TTL decisions, pressure
+    eviction order, and the RL keep-alive feedback loop.  One
+    implementation serves the simulator and (as the fleet's ``Autoscaler``
+    subclass) the live fleet, so the reward plumbing an RL policy trains on
+    in simulation is the same code it runs on in serving.
+
+    RL tombstone semantics: when an RL-chosen TTL expires, a tombstone is
+    parked; the *next* event for that function resolves only the newest
+    tombstone (the most recent, best-informed TTL decision) — a miss iff it
+    arrives within ``rl_miss_window_s`` of the expiry — and clears the rest
+    as stale rather than double-counting them as misses.
+    """
+
+    def __init__(self, suite, *, rl_miss_window_s: float = 60.0):
+        self.suite = suite
+        self.rl_miss_window_s = rl_miss_window_s
+        # function -> [(t_expired, container_id, idle_s)] pending RL outcomes
+        self._rl_tombstones: Dict[str, List[Tuple[float, int, float]]] = \
+            defaultdict(list)
+
+    # ------------------------------------------------------------------ #
+    @property
+    def tick_interval(self) -> Optional[float]:
+        pw = self.suite.prewarm
+        return pw.tick_interval if pw is not None else None
+
+    def observe_arrival(self, function: str, now: float) -> None:
+        from repro.core.policies.prewarm import RLKeepAlive
+        if self.suite.prewarm is not None:
+            self.suite.prewarm.observe(function, now)
+        ka = self.suite.keepalive
+        if isinstance(ka, RLKeepAlive):
+            ka.note_arrival(function, now)
+
+    # ------------------------------------------------------------------ #
+    def ttl_for(self, container: Container, ctx: ClusterContext) -> float:
+        return self.suite.keepalive.ttl(container, ctx)
+
+    def on_reuse(self, container: Container, ctx: ClusterContext,
+                 idle_s: float) -> None:
+        from repro.core.policies.prewarm import RLKeepAlive
+        ka = self.suite.keepalive
+        ka.on_reuse(container, ctx)
+        if isinstance(ka, RLKeepAlive):
+            ka.resolve(container.id, idle_s=idle_s, missed=False)
+        self._resolve_rl_tombstone(container.function, ctx.now, missed=False)
+
+    def on_miss(self, function: str, now: float) -> None:
+        """A request found no warm container — a cold start is being paid."""
+        self._resolve_rl_tombstone(function, now, missed=True)
+
+    def on_expire(self, container: Container, now: float,
+                  idle_s: float) -> None:
+        from repro.core.policies.prewarm import RLKeepAlive
+        if isinstance(self.suite.keepalive, RLKeepAlive):
+            self._rl_tombstones[container.function].append(
+                (now, container.id, idle_s))
+
+    def _resolve_rl_tombstone(self, function: str, now: float, *,
+                              missed: bool) -> None:
+        from repro.core.policies.prewarm import RLKeepAlive
+        ka = self.suite.keepalive
+        if not isinstance(ka, RLKeepAlive):
+            return
+        stones = self._rl_tombstones.get(function)
+        if not stones:
+            return
+        # only the newest expiry is credited with this outcome; older
+        # tombstones are stale (superseded decisions) and dropped
+        t_expired, cid, idle_s = stones.pop()
+        within = (now - t_expired) <= self.rl_miss_window_s
+        ka.resolve(cid, idle_s=idle_s, missed=missed and within)
+        stones.clear()
+
+    # ------------------------------------------------------------------ #
+    def prewarm_targets(self, now: float, ctx: ClusterContext) -> List[str]:
+        pw = self.suite.prewarm
+        if pw is None:
+            return []
+        return pw.decisions(now, ctx)
+
+    def evict_order(self, ctx: ClusterContext) -> List[Container]:
+        return self.suite.keepalive.evict_order(ctx.all_warm_idle(), ctx)

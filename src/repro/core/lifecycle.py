@@ -77,6 +77,8 @@ class FunctionSpec:
     compile_cost: float = 1.0         # relative XLA compile complexity
     chain: Optional[tuple] = None     # names of chained successor functions
     sla_latency_s: Optional[float] = None
+    container_concurrency: int = 1    # Knative-style in-flight cap per
+                                      # container (1 = Lambda semantics)
 
 
 @dataclass
@@ -93,6 +95,8 @@ class Container:
     expiry: float = float("inf")      # scale-to-zero deadline (policy-set)
     has_snapshot: bool = False
     sanitized: bool = True            # paper §6.6: state cleared on reuse
+    concurrency: int = 1              # simultaneous executions admitted
+    inflight: int = 0                 # executions currently on this container
 
     def is_reusable(self, function: str) -> bool:
         return (self.state == ContainerState.WARM_IDLE

@@ -10,8 +10,12 @@ A :class:`PolicySuite` bundles one choice from each mitigation family:
   startup     CSL: how a cold start is shortened (snapshot restore, pause
               pool, partial dependency loading, runtime choice)
 
-The discrete-event simulator (``core/simulator.py``) and the real JAX
-serving engine (``serving/engine.py``) both consume these interfaces.
+Every policy sees one ``Context`` protocol —
+:class:`~repro.core.cluster.ClusterContext` — whether the cluster
+underneath is the discrete-event simulator (``core/simulator.py``), the
+live fleet (``repro.fleet``), or the synchronous serving router
+(``serving/router.py``); all three drive the same
+:class:`~repro.core.cluster.ClusterState` kernel.
 """
 from __future__ import annotations
 
@@ -22,7 +26,7 @@ from typing import Dict, List, Optional, Sequence, TYPE_CHECKING
 from repro.core.lifecycle import Container, FunctionSpec
 
 if TYPE_CHECKING:
-    from repro.core.simulator import SimContext
+    from repro.core.cluster import ClusterContext
 
 
 class KeepAlive:
@@ -30,15 +34,15 @@ class KeepAlive:
 
     name = "base"
 
-    def ttl(self, container: Container, ctx: "SimContext") -> float:
+    def ttl(self, container: Container, ctx: "ClusterContext") -> float:
         raise NotImplementedError
 
     def evict_order(self, candidates: Sequence[Container],
-                    ctx: "SimContext") -> List[Container]:
+                    ctx: "ClusterContext") -> List[Container]:
         """Least-valuable first.  Default: LRU."""
         return sorted(candidates, key=lambda c: c.last_used)
 
-    def on_reuse(self, container: Container, ctx: "SimContext") -> None:
+    def on_reuse(self, container: Container, ctx: "ClusterContext") -> None:
         pass
 
 
@@ -51,7 +55,7 @@ class Prewarm:
     def observe(self, function: str, t: float) -> None:
         pass
 
-    def decisions(self, t: float, ctx: "SimContext") -> List[str]:
+    def decisions(self, t: float, ctx: "ClusterContext") -> List[str]:
         """Functions that should have (at least) one warm container *now*."""
         return []
 
@@ -61,11 +65,11 @@ class Placement:
 
     name = "first-fit"
 
-    def choose_container(self, function: str, ctx: "SimContext") -> Optional[Container]:
+    def choose_container(self, function: str, ctx: "ClusterContext") -> Optional[Container]:
         warm = ctx.warm_idle(function)
         return warm[0] if warm else None
 
-    def choose_worker(self, fn: FunctionSpec, ctx: "SimContext") -> Optional[int]:
+    def choose_worker(self, fn: FunctionSpec, ctx: "ClusterContext") -> Optional[int]:
         for w in range(ctx.num_workers):
             if ctx.free_mb(w) >= fn.memory_mb:
                 return w

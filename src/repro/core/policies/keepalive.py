@@ -69,11 +69,16 @@ class LCS(KeepAlive):
 
     def ttl(self, container: Container, ctx) -> float:
         # enforce budget: if warm pool over budget, shortest-possible TTL for
-        # the LRU tail (the simulator re-asks on every idle transition)
-        warm = ctx.all_warm_idle()
-        used = sum(c.memory_mb for c in warm) + container.memory_mb
+        # the LRU tail (the cluster re-asks on every idle transition).  The
+        # pool footprint comes from the kernel's running warm-idle counter
+        # (which already includes ``container`` — it transitions to
+        # WARM_IDLE before the TTL is asked for — counted twice here to
+        # preserve the pre-kernel budget semantics); only the LRU pick
+        # still walks the warm set.
+        used = ctx.warm_idle_mb() + container.memory_mb
         if used > self.pool_budget_mb:
-            lru = min(warm + [container], key=lambda c: c.last_used)
+            lru = min(ctx.all_warm_idle() + [container],
+                      key=lambda c: c.last_used)
             if lru.id == container.id:
                 return 0.0
         return self.ttl_s

@@ -1,4 +1,5 @@
-"""Discrete-event FaaS-cluster simulator.
+"""Discrete-event FaaS-cluster simulator — an event-heap driver over the
+shared :mod:`repro.core.cluster` kernel.
 
 Simulates a multi-worker serverless cluster executing a workload
 :class:`~repro.core.workload.Trace` under a
@@ -7,13 +8,21 @@ costs from the calibrated :class:`~repro.core.costmodel.CostModel`.
 Produces a :class:`~repro.core.metrics.QoSLedger` (RQ1 parameters).
 
 Semantics (matching the surveyed platforms):
-  * one in-flight request per container (Lambda-style concurrency=1);
+  * up to ``FunctionSpec.container_concurrency`` in-flight requests per
+    container (1 = Lambda-style; >1 = Knative-style slot sharing);
   * scale-to-zero after the policy's keep-alive TTL;
   * memory pressure evicts warm-idle containers in policy order;
   * prewarm policies tick periodically and may start containers proactively;
   * chains trigger the successor invocation at stage completion (the
     cascading-cold-start setting);
+  * workers may be heterogeneous (per-worker memory capacity and speed);
   * every cold start's phase breakdown is recorded (Fig. 10 anatomy).
+
+All container bookkeeping — the FSM, warm-idle indexes, memory counters,
+QoS accounting — lives in :class:`~repro.core.cluster.ClusterState`; this
+module only owns the event heap, the request queue, and the pause-pool /
+prewarm orchestration.  The fleet (``repro.fleet.loadgen``) drives the same
+kernel by clock, which is what keeps sim-vs-fleet calibration exact.
 
 The simulator is deterministic given (trace, suite, cost model).
 """
@@ -23,21 +32,28 @@ import heapq
 import itertools
 from collections import defaultdict, deque
 from dataclasses import dataclass, field
-from typing import Deque, Dict, List, Optional, Tuple
+from typing import Deque, Dict, List, Optional, Sequence, Union
 
+from repro.core.cluster import (ClusterContext, ClusterState, PolicyDriver,
+                                find_worker, scale_breakdown)
 from repro.core.costmodel import CostModel
-from repro.core.lifecycle import (Breakdown, Container, ContainerState,
-                                  FunctionSpec, Phase)
-from repro.core.metrics import QoSLedger, RequestRecord
+from repro.core.lifecycle import Breakdown, Container, FunctionSpec, Phase
+from repro.core.metrics import QoSLedger
 from repro.core.policies.base import PolicySuite
-from repro.core.policies.prewarm import RLKeepAlive
 from repro.core.workload import Invocation, Trace
+
+# the policy-facing view is the shared Context protocol; the name SimContext
+# survives for the policy/predictor docstrings and type hints that grew up
+# against the pre-kernel simulator
+SimContext = ClusterContext
 
 
 @dataclass
 class SimConfig:
     num_workers: int = 4
-    worker_memory_mb: float = 16_384.0
+    # scalar = homogeneous; sequence = per-worker (heterogeneous cluster)
+    worker_memory_mb: Union[float, Sequence[float]] = 16_384.0
+    worker_speed: Union[float, Sequence[float]] = 1.0
     sanitize_on_reuse: bool = True
     sanitize_cost_s: float = 0.004
     rl_miss_window_s: float = 60.0
@@ -50,56 +66,6 @@ class _Pending:
     arrival: float
 
 
-class SimContext:
-    """The read-only policy view of cluster state."""
-
-    def __init__(self, sim: "Simulator"):
-        self._sim = sim
-
-    @property
-    def now(self) -> float:
-        return self._sim.now
-
-    @property
-    def functions(self) -> Dict[str, FunctionSpec]:
-        return self._sim.trace.functions
-
-    @property
-    def cost_model(self) -> CostModel:
-        return self._sim.cost_model
-
-    @property
-    def num_workers(self) -> int:
-        return self._sim.cfg.num_workers
-
-    def warm_idle(self, function: str) -> List[Container]:
-        return [c for c in self._sim.containers.values()
-                if c.is_reusable(function)]
-
-    def all_warm_idle(self) -> List[Container]:
-        return [c for c in self._sim.containers.values()
-                if c.state == ContainerState.WARM_IDLE]
-
-    def free_mb(self, worker: int) -> float:
-        return self._sim.cfg.worker_memory_mb - self._sim.worker_used[worker]
-
-    def active_count(self, function: str) -> int:
-        return sum(1 for c in self._sim.containers.values()
-                   if c.function == function
-                   and c.state in (ContainerState.ACTIVE,
-                                   ContainerState.PROVISIONING))
-
-    def queued_count(self, function: str) -> int:
-        return sum(1 for p in self._sim.queue if p.inv.function == function)
-
-    def cold_start_estimate(self, function: str) -> float:
-        sim = self._sim
-        fn = sim.trace.functions[function]
-        return sim.cost_model.breakdown(
-            fn, from_snapshot=(sim.suite.startup.snapshot
-                               and function in sim.snapshots)).total
-
-
 class Simulator:
     def __init__(self, trace: Trace, suite: PolicySuite,
                  cost_model: Optional[CostModel] = None,
@@ -108,25 +74,48 @@ class Simulator:
         self.suite = suite
         self.cost_model = cost_model or CostModel()
         self.cfg = cfg or SimConfig()
-        self.now = 0.0
-        self.containers: Dict[int, Container] = {}
-        self.worker_used: List[float] = [0.0] * self.cfg.num_workers
+        self.state = ClusterState(
+            trace.functions,
+            num_workers=self.cfg.num_workers,
+            worker_memory_mb=self.cfg.worker_memory_mb,
+            worker_speed=self.cfg.worker_speed,
+            ledger=QoSLedger(horizon=trace.horizon))
+        self.state.ledger.cluster_capacity_gb = self.state.capacity_gb
+        self.ledger = self.state.ledger
+        self.policy = PolicyDriver(suite,
+                                   rl_miss_window_s=self.cfg.rl_miss_window_s)
         self.queue: Deque[_Pending] = deque()
-        self.snapshots: set = set()
+        self._queued_count: Dict[str, int] = defaultdict(int)
         self.pause_pool: int = 0            # available paused containers
-        self.ledger = QoSLedger(horizon=trace.horizon,
-                                cluster_capacity_gb=self.cfg.num_workers
-                                * self.cfg.worker_memory_mb / 1024.0)
         self._events: list = []
         self._seq = itertools.count()
-        self._cid = itertools.count()
-        self._expiry_stamp: Dict[int, float] = {}
         self._inflight_prewarm: set = set()   # functions being prewarmed
-        # function -> [(t_expired, container_id, idle_s)] expiries awaiting an
-        # RL reward signal; resolved by the next arrival for that function
-        self._rl_tombstones: Dict[str, List[Tuple[float, int, float]]] = \
-            defaultdict(list)
         self.phase_log: List[Breakdown] = []
+
+    # ---- kernel views (back-compat with pre-kernel attribute names) ---- #
+    @property
+    def now(self) -> float:
+        return self.state.now
+
+    @now.setter
+    def now(self, t: float) -> None:
+        self.state.now = t
+
+    @property
+    def containers(self) -> Dict[int, Container]:
+        return self.state.containers
+
+    @property
+    def worker_used(self) -> List[float]:
+        return self.state.worker_used
+
+    @property
+    def snapshots(self) -> set:
+        return self.state.snapshots
+
+    def _ctx(self) -> ClusterContext:
+        return ClusterContext(self.state, self.cost_model, self.suite,
+                              queued=self._queued_count.__getitem__)
 
     # ------------------------------------------------------------------ #
     # event plumbing
@@ -145,20 +134,17 @@ class Simulator:
                          * self.suite.startup.pause_pool_mb)
             # pool footprint spread across workers
             for w in range(self.cfg.num_workers):
-                self.worker_used[w] += footprint / self.cfg.num_workers
+                self.state.reserve(w, footprint / self.cfg.num_workers)
 
         while self._events:
             t, _, kind, payload = heapq.heappop(self._events)
             if t > self.trace.horizon and kind == "tick":
                 continue
-            self.now = max(self.now, t)
+            self.state.now = max(self.state.now, t)
             getattr(self, f"_on_{kind}")(payload)
 
         # close out idle accounting at horizon
-        for c in self.containers.values():
-            if c.state == ContainerState.WARM_IDLE:
-                end = max(self.trace.horizon, c.warm_since)
-                self.ledger.add_idle(end - c.warm_since, c.memory_mb / 1024.0)
+        self.state.close_out(self.trace.horizon)
         # pause pool idle cost over whole horizon
         if self.suite.startup.pause_pool_size:
             self.ledger.add_idle(
@@ -170,104 +156,85 @@ class Simulator:
     # handlers
     # ------------------------------------------------------------------ #
     def _on_arrival(self, pend: _Pending):
-        ctx = SimContext(self)
-        fn_name = pend.inv.function
-        if self.suite.prewarm is not None:
-            self.suite.prewarm.observe(fn_name, self.now)
-        ka = self.suite.keepalive
-        if isinstance(ka, RLKeepAlive):
-            ka.note_arrival(fn_name, self.now)
+        self.policy.observe_arrival(pend.inv.function, self.now)
         self._dispatch(pend)
 
     def _dispatch(self, pend: _Pending):
-        ctx = SimContext(self)
-        fn = self.trace.functions[pend.inv.function]
-        c = self.suite.placement.choose_container(pend.inv.function, ctx)
+        ctx = self._ctx()
+        fn_name = pend.inv.function
+        fn = self.trace.functions[fn_name]
+        c = self.suite.placement.choose_container(fn_name, ctx)
         if c is not None:
             self._reuse(c, pend)
             return
-        self._resolve_rl_tombstone(pend.inv.function, missed=True)
-        worker = self._find_memory(fn)
+        # concurrency slots: join an ACTIVE container with spare capacity
+        c = self.state.free_slot(fn_name)
+        if c is not None:
+            self._begin_exec(c, pend, cold=False)
+            return
+        self.policy.on_miss(fn_name, self.now)
+        worker = find_worker(self.state, fn, self.suite, ctx)
         if worker is None:
             if len(self.queue) < self.cfg.max_queue:
                 self.queue.append(pend)
+                self._queued_count[fn_name] += 1
             else:
                 self.ledger.dropped += 1
             return
         self._cold_start(worker, fn, pend)
 
     def _reuse(self, c: Container, pend: _Pending):
-        ctx = SimContext(self)
+        self.policy.on_reuse(c, self._ctx(), self.now - c.warm_since)
+        self._begin_exec(c, pend, cold=False,
+                         sanitize=self.cfg.sanitize_on_reuse)
+
+    def _begin_exec(self, c: Container, pend: _Pending, *, cold: bool,
+                    bd: Optional[Breakdown] = None,
+                    first_run_penalty: float = 0.0,
+                    sanitize: Optional[bool] = None):
+        # sanitization (state clearing, §6.6) applies only when a request
+        # takes over an idle container (sanitize is None otherwise) — not
+        # on cold first runs, and not on concurrency-slot joins, which
+        # overlap an execution already in flight rather than following one
+        self.state.acquire(c, self.now, sanitized=sanitize)
         fn = self.trace.functions[pend.inv.function]
-        self.ledger.add_idle(self.now - c.warm_since, c.memory_mb / 1024.0)
-        self.suite.keepalive.on_reuse(c, ctx)
-        ka = self.suite.keepalive
-        if isinstance(ka, RLKeepAlive):
-            # warm hit: reward the chosen TTL (idle burned, no miss)
-            ka.resolve(c.id, idle_s=self.now - c.warm_since, missed=False)
-        self._resolve_rl_tombstone(pend.inv.function, missed=False)
-        c.state = ContainerState.ACTIVE
-        c.uses += 1
-        c.last_used = self.now
-        c.sanitized = self.cfg.sanitize_on_reuse
-        exec_t = self.cost_model.exec_time(fn)
-        if self.cfg.sanitize_on_reuse:
+        exec_t = (self.cost_model.exec_time(
+            fn, first_run_penalty=first_run_penalty)
+            / self.state.speed(c.worker))
+        if sanitize:
             exec_t += self.cfg.sanitize_cost_s
         end = self.now + exec_t
-        rec = RequestRecord(pend.inv.function, pend.arrival, self.now, end,
-                            cold=False)
-        self.ledger.record(rec, memory_gb=fn.memory_mb / 1024.0)
+        self.state.record_execution(
+            c, [(pend.inv.function, pend.arrival)], self.now, end,
+            cold=cold, bd=bd)
         self._push(end, "exec_done", (c.id, pend.inv))
 
-    def _find_memory(self, fn: FunctionSpec) -> Optional[int]:
-        ctx = SimContext(self)
-        w = self.suite.placement.choose_worker(fn, ctx)
-        if w is not None:
-            return w
-        # evict warm-idle containers in policy order until something fits
-        order = self.suite.keepalive.evict_order(ctx.all_warm_idle(), ctx)
-        for victim in order:
-            self._release(victim)
-            w = self.suite.placement.choose_worker(fn, ctx)
-            if w is not None:
-                return w
-        return None
-
-    def _cold_start(self, worker: int, fn: FunctionSpec, pend: Optional[_Pending],
-                    *, prewarm: bool = False):
+    def _cold_start(self, worker: int, fn: FunctionSpec,
+                    pend: Optional[_Pending]):
         st = self.suite.startup
         from_pool = self.pause_pool > 0 and st.pause_pool_size > 0
         if from_pool:
             self.pause_pool -= 1
             self._push(self.now + self.cost_model.breakdown(fn).drop(
                 Phase.DEPS_LOAD, Phase.CODE_INIT).total, "pool_refill", None)
-        from_snap = st.snapshot and fn.name in self.snapshots
-        concurrent = sum(
-            1 for c in self.containers.values()
-            if c.worker == worker and c.state == ContainerState.PROVISIONING)
+        from_snap = st.snapshot and fn.name in self.state.snapshots
         bd = self.cost_model.breakdown(
-            fn, concurrent_colds=concurrent, from_snapshot=from_snap,
-            from_pause_pool=from_pool,
+            fn, concurrent_colds=self.state.provisioning_on(worker),
+            from_snapshot=from_snap, from_pause_pool=from_pool,
             deps_fraction=st.deps_fraction if not from_snap else 1.0)
+        bd = scale_breakdown(bd, self.state.speed(worker))
         self.phase_log.append(bd)
-        cid = next(self._cid)
-        c = Container(id=cid, function=fn.name, state=ContainerState.PROVISIONING,
-                      worker=worker, memory_mb=fn.memory_mb, created_at=self.now,
-                      has_snapshot=from_snap)
-        self.containers[cid] = c
-        self.worker_used[worker] += fn.memory_mb
-        self.ledger.containers_launched += 1
-        ready = self.now + bd.total
+        c = self.state.admit(fn.name, worker, self.now,
+                             has_snapshot=from_snap)
         if st.snapshot:
-            self.snapshots.add(fn.name)
-        self._push(ready, "start_done", (cid, pend, bd))
+            self.state.snapshots.add(fn.name)
+        self._push(self.now + bd.total, "start_done", (c.id, pend, bd))
 
     def _on_start_done(self, payload):
         cid, pend, bd = payload
-        c = self.containers.get(cid)
+        c = self.state.containers.get(cid)
         if c is None:
             return
-        fn = self.trace.functions[c.function]
         if pend is None:
             # prewarmed container -> warm idle
             self._inflight_prewarm.discard(c.function)
@@ -278,124 +245,91 @@ class Simulator:
         st = self.suite.startup
         penalty = 0.0
         if st.deps_fraction < 1.0 and c.uses == 0:
+            fn = self.trace.functions[c.function]
             full = self.cost_model.breakdown(fn).seconds[Phase.DEPS_LOAD]
             penalty = st.first_run_penalty_frac * full * (1 - st.deps_fraction)
-        c.state = ContainerState.ACTIVE
-        c.uses += 1
-        c.last_used = self.now
-        exec_t = self.cost_model.exec_time(fn, first_run_penalty=penalty)
-        end = self.now + exec_t
-        rec = RequestRecord(pend.inv.function, pend.arrival, self.now, end,
-                            cold=True, startup=bd)
-        self.ledger.record(rec, memory_gb=fn.memory_mb / 1024.0)
-        self._push(end, "exec_done", (cid, pend.inv))
+        self._begin_exec(c, pend, cold=True, bd=bd,
+                         first_run_penalty=penalty)
 
     def _on_exec_done(self, payload):
         cid, inv = payload
-        c = self.containers.get(cid)
+        c = self.state.containers.get(cid)
         if c is None:
             return
         # fire chain successor
         if inv is not None and inv.chain:
             nxt = Invocation(self.now, inv.chain[0], chain=inv.chain[1:])
             self._push(self.now, "arrival", _Pending(nxt, self.now))
-        self._to_idle(c)
+        if self.state.release_slot(c, self.now):
+            self._to_idle(c)
         self._drain_queue()
 
     def _to_idle(self, c: Container):
-        ctx = SimContext(self)
-        c.state = ContainerState.WARM_IDLE
-        c.warm_since = self.now
-        c.last_used = self.now
-        ttl = self.suite.keepalive.ttl(c, ctx)
-        expiry = self.now + ttl
-        c.expiry = expiry
-        self._expiry_stamp[c.id] = expiry
+        self.state.to_idle(c, self.now)
+        ttl = self.policy.ttl_for(c, self._ctx())
+        expiry = self.state.set_expiry(c, self.now + ttl)
         if expiry != float("inf"):
             self._push(expiry, "expire", (c.id, expiry))
 
     def _on_expire(self, payload):
         cid, stamp = payload
-        c = self.containers.get(cid)
-        if c is None or c.state != ContainerState.WARM_IDLE:
-            return
-        if self._expiry_stamp.get(cid) != stamp:
-            return  # superseded by a reuse
-        ka = self.suite.keepalive
-        if isinstance(ka, RLKeepAlive):
-            idle = self.now - c.warm_since
-            self._rl_tombstones[c.function].append((self.now, cid, idle))
-        self._release(c)
+        c = self.state.expiry_valid(cid, stamp)
+        if c is None:
+            return  # dead, busy again, or superseded by a reuse
+        self.policy.on_expire(c, self.now, self.now - c.warm_since)
+        self.state.destroy(c, self.now)
         self._drain_queue()
-
-    def _release(self, c: Container):
-        if c.state == ContainerState.WARM_IDLE:
-            self.ledger.add_idle(self.now - c.warm_since, c.memory_mb / 1024.0)
-        self.worker_used[c.worker] -= c.memory_mb
-        c.state = ContainerState.DEAD
-        self.containers.pop(c.id, None)
-
-    def _resolve_rl_tombstone(self, function: str, *, missed: bool):
-        ka = self.suite.keepalive
-        if not isinstance(ka, RLKeepAlive):
-            return
-        stones = self._rl_tombstones.get(function)
-        if not stones:
-            return
-        # Resolution semantics: only the NEWEST expiry is credited with this
-        # outcome (it made the most recent, best-informed TTL decision); any
-        # older tombstones were superseded before an arrival could judge
-        # them, so they are cleared as stale rather than double-counted as
-        # misses.  A miss only counts if the arrival lands within
-        # rl_miss_window_s of the expiry — later arrivals would have missed
-        # under any reasonable TTL.
-        t_expired, cid, idle_s = stones.pop()
-        within = (self.now - t_expired) <= self.cfg.rl_miss_window_s
-        ka.resolve(cid, idle_s=idle_s, missed=missed and within)
-        stones.clear()
 
     def _on_pool_refill(self, _):
         if self.pause_pool < self.suite.startup.pause_pool_size:
             self.pause_pool += 1
 
     def _on_tick(self, _):
-        pw = self.suite.prewarm
-        ctx = SimContext(self)
-        for fn_name in pw.decisions(self.now, ctx):
+        ctx = self._ctx()
+        for fn_name in self.policy.prewarm_targets(self.now, ctx):
             if ctx.warm_idle(fn_name) or fn_name in self._inflight_prewarm:
                 continue
             if ctx.active_count(fn_name):
                 continue
             fn = self.trace.functions[fn_name]
-            worker = self._find_memory(fn)
+            worker = find_worker(self.state, fn, self.suite, ctx)
             if worker is None:
                 continue
             self._inflight_prewarm.add(fn_name)
-            self._cold_start(worker, fn, None, prewarm=True)
+            self._cold_start(worker, fn, None)
         if self.now <= self.trace.horizon:
-            self._push(self.now + pw.tick_interval, "tick", None)
+            self._push(self.now + self.suite.prewarm.tick_interval,
+                       "tick", None)
 
     def _drain_queue(self):
         progressed = True
         while self.queue and progressed:
             progressed = False
             pend = self.queue.popleft()
-            ctx = SimContext(self)
-            fn = self.trace.functions[pend.inv.function]
-            c = self.suite.placement.choose_container(pend.inv.function, ctx)
+            fn_name = pend.inv.function
+            self._queued_count[fn_name] -= 1
+            ctx = self._ctx()
+            fn = self.trace.functions[fn_name]
+            c = self.suite.placement.choose_container(fn_name, ctx)
             if c is not None:
                 self._reuse(c, pend)
+                progressed = True
+                continue
+            c = self.state.free_slot(fn_name)
+            if c is not None:
+                self._begin_exec(c, pend, cold=False)
                 progressed = True
                 continue
             # same policy-order eviction as the arrival path: a queued
             # request may reclaim warm-idle memory held by other functions
             # (otherwise it stalls until an unrelated TTL expiry)
-            worker = self._find_memory(fn)
+            worker = find_worker(self.state, fn, self.suite, ctx)
             if worker is not None:
                 self._cold_start(worker, fn, pend)
                 progressed = True
             else:
                 self.queue.appendleft(pend)
+                self._queued_count[fn_name] += 1
 
 
 def simulate(trace: Trace, suite: PolicySuite, *,

@@ -40,11 +40,14 @@ class Trace:
 
 
 def _mk_functions(n: int, *, package_mb=64.0, memory_mb=1024.0,
-                  exec_time_s=0.08, runtime="python-jit") -> Dict[str, FunctionSpec]:
+                  exec_time_s=0.08, runtime="python-jit",
+                  **spec_kw) -> Dict[str, FunctionSpec]:
+    """Extra ``spec_kw`` pass straight to FunctionSpec (e.g.
+    ``container_concurrency`` for Knative-style slot-sharing scenarios)."""
     return {
         f"fn{i}": FunctionSpec(
             name=f"fn{i}", package_mb=package_mb, memory_mb=memory_mb,
-            exec_time_s=exec_time_s, runtime=runtime)
+            exec_time_s=exec_time_s, runtime=runtime, **spec_kw)
         for i in range(n)
     }
 

@@ -1,10 +1,15 @@
 """Concurrent, policy-driven serving fleet (the live twin of the simulator).
 
+A clock-advanced driver over the shared :mod:`repro.core.cluster` kernel —
+container FSM, warm pools, memory counters, and QoS accounting are the same
+code the discrete-event simulator runs, so virtual-clock replays are
+ledger-identical between the two.
+
 Layers:
   clock       virtual + scaled wall-clock time under one protocol
   frontend    per-function queues, admission control, SLO deadlines
-  pool        replicas, concurrency slots, micro-batching, exec backends
-  autoscaler  core/policies + core/predictors adapted to live engines
+  pool        the kernel's replica registry + execution backends
+  autoscaler  the shared PolicyDriver/Context under their fleet names
   loadgen     trace replay -> QoSLedger (sim-vs-real calibration loop)
 """
 from repro.fleet.autoscaler import Autoscaler, FleetContext

@@ -1,151 +1,44 @@
-"""Predictor-driven autoscaling for the fleet.
+"""Predictor-driven autoscaling for the fleet — fleet-flavoured views of
+the shared cluster kernel.
 
-Adapts the simulator's policy vocabulary (``core/policies`` +
-``core/predictors``) to live engine pools: the same
-:class:`~repro.core.policies.base.PolicySuite` object that configures a
-``core/simulator.py`` run configures a fleet run.
+Since the :mod:`repro.core.cluster` kernel landed, everything that used to
+be hand-mirrored between this module and ``core/simulator.py`` — the policy
+``Context`` protocol and the RL keep-alive tombstone bookkeeping — lives in
+one place:
 
-  * :class:`FleetContext` implements the ``SimContext`` protocol (duck-typed
-    — ``warm_idle``, ``free_mb``, ``queued_count``, ``cold_start_estimate``,
-    …) over a :class:`~repro.fleet.pool.EnginePool` and
-    :class:`~repro.fleet.frontend.Frontend`, so keep-alive, prewarm, and
-    placement policies run verbatim against real or modeled replicas.
-  * :class:`Autoscaler` owns the per-replica TTL decisions, prewarm ticks
-    (including snapshot-restore prewarms once a function has a snapshot
-    baked), pressure evictions, and the RL keep-alive feedback loop.
-
-RL tombstones follow the simulator's (documented) semantics: when an
-RL-chosen TTL expires, a tombstone is parked; the *next* event for that
-function resolves only the newest tombstone — a miss if it arrives within
-``rl_miss_window_s`` of the expiry — and clears the rest as stale.
+  * :class:`FleetContext` is the shared
+    :class:`~repro.core.cluster.ClusterContext` constructed from a pool's
+    kernel plus the frontend's queue depths, so keep-alive, prewarm, and
+    placement policies run verbatim against real or modeled replicas with
+    the *same state representation* they were trained/tuned on in the
+    simulator.
+  * :class:`Autoscaler` is the shared
+    :class:`~repro.core.cluster.PolicyDriver` (per-replica TTL decisions,
+    prewarm ticks, pressure-eviction order, RL tombstone resolution) under
+    its historical fleet name.
 """
 from __future__ import annotations
 
-from collections import defaultdict
-from typing import Dict, List, Optional, Tuple
+from typing import Optional
 
+from repro.core.cluster import ClusterContext, PolicyDriver
 from repro.core.costmodel import CostModel
-from repro.core.lifecycle import Container, FunctionSpec
-from repro.core.policies.base import PolicySuite
-from repro.core.policies.prewarm import RLKeepAlive
 from repro.fleet.frontend import Frontend
 from repro.fleet.pool import EnginePool
 
 
-class FleetContext:
-    """The read-only policy view of fleet state (SimContext twin)."""
+class FleetContext(ClusterContext):
+    """The read-only policy view of fleet state (kernel context + the
+    frontend's per-function queue depths)."""
 
     def __init__(self, pool: EnginePool, frontend: Frontend,
-                 cost_model: CostModel, now: float,
-                 suite: Optional[PolicySuite] = None):
-        self._pool = pool
-        self._frontend = frontend
-        self._cost_model = cost_model
-        self._now = now
-        self._suite = suite
-
-    @property
-    def now(self) -> float:
-        return self._now
-
-    @property
-    def functions(self) -> Dict[str, FunctionSpec]:
-        return self._pool.functions
-
-    @property
-    def cost_model(self) -> CostModel:
-        return self._cost_model
-
-    @property
-    def num_workers(self) -> int:
-        return self._pool.num_workers
-
-    def warm_idle(self, function: str) -> List[Container]:
-        return self._pool.warm_idle(function)
-
-    def all_warm_idle(self) -> List[Container]:
-        return self._pool.all_warm_idle()
-
-    def free_mb(self, worker: int) -> float:
-        return self._pool.free_mb(worker)
-
-    def active_count(self, function: str) -> int:
-        return self._pool.active_count(function)
-
-    def queued_count(self, function: str) -> int:
-        return self._frontend.queued_count(function)
-
-    def cold_start_estimate(self, function: str) -> float:
-        fn = self._pool.functions[function]
-        from_snap = (self._suite is not None and self._suite.startup.snapshot
-                     and function in self._pool.snapshots)
-        return self._cost_model.breakdown(fn, from_snapshot=from_snap).total
+                 cost_model: CostModel, now: Optional[float] = None,
+                 suite=None):
+        super().__init__(pool.state, cost_model, suite,
+                         queued=frontend.queued_count, now=now)
 
 
-class Autoscaler:
-    def __init__(self, suite: PolicySuite, *, rl_miss_window_s: float = 60.0):
-        self.suite = suite
-        self.rl_miss_window_s = rl_miss_window_s
-        # function -> [(t_expired, container_id, idle_s)] pending RL outcomes
-        self._rl_tombstones: Dict[str, List[Tuple[float, int, float]]] = \
-            defaultdict(list)
-
-    # ------------------------------------------------------------------ #
-    @property
-    def tick_interval(self) -> Optional[float]:
-        pw = self.suite.prewarm
-        return pw.tick_interval if pw is not None else None
-
-    def observe_arrival(self, function: str, now: float) -> None:
-        if self.suite.prewarm is not None:
-            self.suite.prewarm.observe(function, now)
-        ka = self.suite.keepalive
-        if isinstance(ka, RLKeepAlive):
-            ka.note_arrival(function, now)
-
-    # ------------------------------------------------------------------ #
-    def ttl_for(self, container: Container, ctx: FleetContext) -> float:
-        return self.suite.keepalive.ttl(container, ctx)
-
-    def on_reuse(self, container: Container, ctx: FleetContext,
-                 idle_s: float) -> None:
-        ka = self.suite.keepalive
-        ka.on_reuse(container, ctx)
-        if isinstance(ka, RLKeepAlive):
-            ka.resolve(container.id, idle_s=idle_s, missed=False)
-        self._resolve_rl_tombstone(container.function, ctx.now, missed=False)
-
-    def on_miss(self, function: str, now: float) -> None:
-        """A request found no warm replica — a cold start is being paid."""
-        self._resolve_rl_tombstone(function, now, missed=True)
-
-    def on_expire(self, container: Container, now: float, idle_s: float) -> None:
-        ka = self.suite.keepalive
-        if isinstance(ka, RLKeepAlive):
-            self._rl_tombstones[container.function].append(
-                (now, container.id, idle_s))
-
-    def _resolve_rl_tombstone(self, function: str, now: float, *,
-                              missed: bool) -> None:
-        ka = self.suite.keepalive
-        if not isinstance(ka, RLKeepAlive):
-            return
-        stones = self._rl_tombstones.get(function)
-        if not stones:
-            return
-        # only the newest expiry is credited with this outcome; older
-        # tombstones are stale (superseded decisions) and dropped
-        t_expired, cid, idle_s = stones.pop()
-        within = (now - t_expired) <= self.rl_miss_window_s
-        ka.resolve(cid, idle_s=idle_s, missed=missed and within)
-        stones.clear()
-
-    # ------------------------------------------------------------------ #
-    def prewarm_targets(self, now: float, ctx: FleetContext) -> List[str]:
-        pw = self.suite.prewarm
-        if pw is None:
-            return []
-        return pw.decisions(now, ctx)
-
-    def evict_order(self, ctx: FleetContext) -> List[Container]:
-        return self.suite.keepalive.evict_order(ctx.all_warm_idle(), ctx)
+class Autoscaler(PolicyDriver):
+    """The fleet's policy driver — see
+    :class:`~repro.core.cluster.PolicyDriver` for the TTL / prewarm /
+    eviction / RL-tombstone semantics (shared with the simulator)."""

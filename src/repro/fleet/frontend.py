@@ -17,6 +17,10 @@ owns every request between arrival and dispatch:
 
 Every shed request is tallied by reason in :class:`DropLedger` so the QoS
 ledger's single ``dropped`` counter can be decomposed.
+
+The frontend is the one fleet layer with no simulator twin: it owns
+*requests* (pre-dispatch), never containers — all container state lives in
+the shared :mod:`repro.core.cluster` kernel.
 """
 from __future__ import annotations
 

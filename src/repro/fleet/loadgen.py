@@ -15,11 +15,20 @@ Run modes (orthogonal to everything else):
   * ``WallClock``    + ``EngineBackend``   — real engines, real XLA cold
     starts, wall-clock timing (the ground-truth side of the loop).
 
-The event loop mirrors the simulator's semantics (one slot = one in-flight
-execution, scale-to-zero on TTL expiry, pressure evictions in policy
-order, prewarm ticks, chain cascades) and adds what only a live fleet
-needs: admission control with SLO deadlines, per-function queues,
-concurrency slots per replica, and micro-batching of shape-compatible
+The runner and the simulator are two drivers over the same
+:class:`~repro.core.cluster.ClusterState` kernel — the simulator advances
+it by event heap, this runner by clock — so container semantics
+(scale-to-zero on TTL expiry, pressure evictions in policy order, prewarm
+ticks, chain cascades, per-container concurrency, heterogeneous workers)
+agree by construction; on a virtual-clock replay with the modeled backend
+the two ledgers are *identical*.  Two scoped exceptions: pause pools
+(``Startup.pause_pool_size``) are modeled by the simulator only — the
+fleet has no generic paused-container analogue yet and replays those
+suites as plain cold starts — and under sustained memory pressure the
+queueing disciplines differ (the simulator keeps one global FIFO; the
+fleet per-function queues with no cross-function head-of-line blocking).
+What only a live fleet needs stays here: admission control with SLO
+deadlines, per-function queues, and micro-batching of shape-compatible
 requests.
 """
 from __future__ import annotations
@@ -27,13 +36,14 @@ from __future__ import annotations
 import heapq
 import itertools
 from dataclasses import dataclass
-from typing import Dict, List, Optional
+from typing import List, Optional, Sequence, Union
 
 import numpy as np
 
+from repro.core.cluster import find_worker
 from repro.core.costmodel import CostModel
-from repro.core.lifecycle import Breakdown, ContainerState, Phase
-from repro.core.metrics import QoSLedger, RequestRecord
+from repro.core.lifecycle import Breakdown, Container, Phase
+from repro.core.metrics import QoSLedger
 from repro.core.policies.base import PolicySuite
 from repro.core.workload import Trace
 from repro.fleet.autoscaler import Autoscaler, FleetContext
@@ -45,7 +55,9 @@ from repro.fleet.pool import EnginePool, ExecutionBackend, ModeledBackend
 @dataclass
 class FleetConfig:
     num_workers: int = 4
-    worker_memory_mb: float = 16_384.0
+    # scalar = homogeneous; sequence = per-worker (heterogeneous cluster)
+    worker_memory_mb: Union[float, Sequence[float]] = 16_384.0
+    worker_speed: Union[float, Sequence[float]] = 1.0
     slots_per_replica: int = 1          # >1 = concurrent executions/replica
     max_batch: int = 1                  # micro-batch size cap
     max_queue_per_function: int = 100_000
@@ -76,23 +88,26 @@ class FleetRunner:
         self.frontend = Frontend(AdmissionConfig(
             max_queue_per_function=self.cfg.max_queue_per_function,
             slo_latency_s=self.cfg.slo_latency_s))
+        self.ledger = QoSLedger(horizon=trace.horizon)
         self.pool = EnginePool(trace.functions,
                                num_workers=self.cfg.num_workers,
                                worker_memory_mb=self.cfg.worker_memory_mb,
+                               worker_speed=self.cfg.worker_speed,
                                backend=self.backend,
-                               slots_per_replica=self.cfg.slots_per_replica)
+                               slots_per_replica=self.cfg.slots_per_replica,
+                               ledger=self.ledger)
+        self.state = self.pool.state
+        self.ledger.cluster_capacity_gb = self.state.capacity_gb
         self.autoscaler = Autoscaler(suite,
                                      rl_miss_window_s=self.cfg.rl_miss_window_s)
-        self.ledger = QoSLedger(
-            horizon=trace.horizon,
-            cluster_capacity_gb=self.cfg.num_workers
-            * self.cfg.worker_memory_mb / 1024.0)
-        self.now = 0.0
         self._events: list = []
         self._seq = itertools.count()
         self._rid = itertools.count()
-        self._expiry_stamp: Dict[int, float] = {}
         self._inflight_prewarm: set = set()
+
+    @property
+    def now(self) -> float:
+        return self.state.now
 
     # ------------------------------------------------------------------ #
     def _push(self, t: float, kind: str, payload=None):
@@ -125,14 +140,11 @@ class FleetRunner:
             if t > self.trace.horizon and kind == "tick":
                 continue
             self.clock.sleep_until(t)
-            self.now = max(self.now, t)
+            self.state.now = max(self.state.now, t)
             getattr(self, f"_on_{kind}")(payload)
 
         # close out idle accounting at horizon
-        for c in list(self.pool.containers()):
-            if c.state == ContainerState.WARM_IDLE:
-                end = max(self.trace.horizon, c.warm_since)
-                self.ledger.add_idle(end - c.warm_since, c.memory_mb / 1024.0)
+        self.state.close_out(self.trace.horizon)
         self.ledger.dropped = self.frontend.drops.total
         return self.ledger
 
@@ -150,7 +162,8 @@ class FleetRunner:
             if (ctx.warm_idle(fn_name) or fn_name in self._inflight_prewarm
                     or ctx.active_count(fn_name)):
                 continue
-            worker = self._find_worker(self.trace.functions[fn_name], ctx)
+            worker = find_worker(self.state, self.pool.functions[fn_name],
+                                 self.suite, ctx)
             if worker is None:
                 continue
             self._inflight_prewarm.add(fn_name)
@@ -166,7 +179,7 @@ class FleetRunner:
         if not batch:
             # prewarmed replica -> warm idle; queued work may claim it now
             self._inflight_prewarm.discard(replica.function)
-            self._to_idle(replica)
+            self._to_idle(replica.container)
             self._drain_all()
             return
         st = self.suite.startup
@@ -183,25 +196,22 @@ class FleetRunner:
         replica = self.pool.replicas.get(cid)
         if replica is None:
             return
-        replica.inflight -= 1
+        drained = self.state.release_slot(replica.container, self.now)
         for req in batch:
             if req.chain:
                 nxt = self._mk_request(req.chain[0], self.now, req.chain[1:])
                 self._push(self.now, "arrival", nxt)
-        if replica.inflight == 0:
-            self._to_idle(replica)
+        if drained:
+            self._to_idle(replica.container)
         self._drain_all()
 
     def _on_expire(self, payload):
         cid, stamp = payload
-        replica = self.pool.replicas.get(cid)
-        if replica is None or replica.state != ContainerState.WARM_IDLE:
-            return
-        if self._expiry_stamp.get(cid) != stamp:
-            return  # superseded by a reuse
-        c = replica.container
+        c = self.state.expiry_valid(cid, stamp)
+        if c is None:
+            return  # dead, busy again, or superseded by a reuse
         self.autoscaler.on_expire(c, self.now, self.now - c.warm_since)
-        self._release(replica)
+        self.state.destroy(c, self.now)
         self._drain_all()
 
     # ------------------------------------------------------------------ #
@@ -229,8 +239,8 @@ class FleetRunner:
             return True
         # cold path
         self.autoscaler.on_miss(fn_name, self.now)
-        fn = self.trace.functions[fn_name]
-        worker = self._find_worker(fn, ctx)
+        worker = find_worker(self.state, self.pool.functions[fn_name],
+                             self.suite, ctx)
         if worker is None:
             return False          # stays queued; retried on the next release
         batch = self._take_batch(fn_name)
@@ -242,77 +252,47 @@ class FleetRunner:
     def _take_batch(self, fn_name: str) -> List[Request]:
         return self.frontend.take_batch(fn_name, self.now, self.cfg.max_batch)
 
-    def _find_worker(self, fn, ctx: FleetContext) -> Optional[int]:
-        w = self.suite.placement.choose_worker(fn, ctx)
-        if w is not None:
-            return w
-        for victim in self.autoscaler.evict_order(ctx):
-            self._release(self.pool.replica_for(victim))
-            w = self.suite.placement.choose_worker(fn, ctx)
-            if w is not None:
-                return w
-        return None
-
     def _launch(self, fn_name: str, worker: int, batch: List[Request]):
         st = self.suite.startup
-        from_snap = st.snapshot and fn_name in self.pool.snapshots
+        from_snap = st.snapshot and fn_name in self.state.snapshots
         replica, bd = self.pool.start_replica(
             fn_name, worker, self.now, from_snapshot=from_snap,
             deps_fraction=st.deps_fraction if not from_snap else 1.0)
         if st.snapshot:
-            self.pool.snapshots.add(fn_name)
-        self.ledger.containers_launched += 1
+            self.state.snapshots.add(fn_name)
         self._push(self.now + bd.total, "start_done", (replica.id, batch, bd))
 
     def _reuse(self, replica, batch: List[Request]):
         c = replica.container
-        idle = self.now - c.warm_since
-        self.ledger.add_idle(idle, c.memory_mb / 1024.0)
-        self.autoscaler.on_reuse(c, self._ctx(), idle)
-        c.sanitized = self.cfg.sanitize_on_reuse
-        self._begin_exec(replica, batch, cold=False, bd=None)
+        self.autoscaler.on_reuse(c, self._ctx(), self.now - c.warm_since)
+        self._begin_exec(replica, batch, cold=False, bd=None,
+                         sanitize=self.cfg.sanitize_on_reuse)
 
     def _begin_exec(self, replica, batch: List[Request], *, cold: bool,
-                    bd: Optional[Breakdown], first_run_penalty: float = 0.0):
+                    bd: Optional[Breakdown], first_run_penalty: float = 0.0,
+                    sanitize: Optional[bool] = None):
+        # sanitization applies only on warm reuse (sanitize is None
+        # otherwise), never on cold first runs or concurrency-slot joins —
+        # matching the simulator's accounting exactly
         c = replica.container
-        c.state = ContainerState.ACTIVE
-        c.uses += 1
-        c.last_used = self.now
-        replica.inflight += 1
+        self.state.acquire(c, self.now, sanitized=sanitize)
         exec_t = self.backend.execute(replica, batch,
-                                      first_run_penalty=first_run_penalty)
-        if not cold and self.cfg.sanitize_on_reuse:
+                                      first_run_penalty=first_run_penalty,
+                                      speed=self.state.speed(c.worker))
+        if sanitize:
             exec_t += self.cfg.sanitize_cost_s
         end = self.now + exec_t
-        # the replica's footprint is statically partitioned across its
-        # concurrency slots, and a micro-batch further splits its slot's
-        # share — so summed exec GB-s never exceeds replica-seconds even
-        # with overlapping slot executions
-        mem_gb = (replica.spec.memory_mb / 1024.0
-                  / replica.slots / len(batch))
-        for req in batch:
-            rec = RequestRecord(req.function, req.arrival, self.now, end,
-                                cold=cold, startup=bd if cold else None)
-            self.ledger.record(rec, memory_gb=mem_gb)
+        self.state.record_execution(
+            c, [(req.function, req.arrival) for req in batch],
+            self.now, end, cold=cold, bd=bd)
         self._push(end, "exec_done", (replica.id, batch))
 
-    def _to_idle(self, replica):
-        c = replica.container
-        c.state = ContainerState.WARM_IDLE
-        c.warm_since = self.now
-        c.last_used = self.now
+    def _to_idle(self, c: Container):
+        self.state.to_idle(c, self.now)
         ttl = self.autoscaler.ttl_for(c, self._ctx())
-        expiry = self.now + ttl
-        c.expiry = expiry
-        self._expiry_stamp[c.id] = expiry
+        expiry = self.state.set_expiry(c, self.now + ttl)
         if expiry != float("inf"):
             self._push(expiry, "expire", (c.id, expiry))
-
-    def _release(self, replica):
-        c = replica.container
-        if c.state == ContainerState.WARM_IDLE:
-            self.ledger.add_idle(self.now - c.warm_since, c.memory_mb / 1024.0)
-        self.pool.release(replica)
 
     def _drain_all(self):
         progressed = True

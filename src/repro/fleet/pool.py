@@ -1,11 +1,13 @@
 """Engine pool: per-function replicas, concurrency slots, micro-batching.
 
-The pool replaces the router's one-engine-per-function limit with N
-replicas per function, each holding ``slots`` concurrency slots; one slot
-executes one (possibly micro-batched) request group at a time.  Replica
-lifecycle is expressed with the same :class:`~repro.core.lifecycle.Container`
-FSM the simulator and policies use, so every ``core/policies`` suite drives
-the fleet unchanged.
+The pool is the fleet's view of the shared
+:class:`~repro.core.cluster.ClusterState` kernel: replica lifecycle,
+warm-idle lookup, per-worker memory accounting, and concurrency-slot
+bookkeeping all live in the kernel (the same code the simulator drives), so
+every ``core/policies`` suite drives the fleet unchanged and sim-vs-fleet
+calibration is structural rather than accidental.  What the pool adds on
+top is the *execution* side only: which engine object backs a container and
+where its startup/execution durations come from.
 
 Execution is abstracted behind :class:`ExecutionBackend`:
 
@@ -17,30 +19,36 @@ Execution is abstracted behind :class:`ExecutionBackend`:
     replicas: cold starts pay genuine XLA compilation (or snapshot restore
     through :class:`~repro.serving.engine.SnapshotStore`) and execution runs
     the compiled model, all wall-clock measured.
+
+Both backends take the placement worker's speed factor, so heterogeneous
+clusters (per-worker memory + speed) replay identically under sim and
+fleet; the real-engine backend ignores it (its durations are measured, not
+modeled).
 """
 from __future__ import annotations
 
-import itertools
 import time
 from dataclasses import dataclass
-from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from repro.core.cluster import ClusterState, scale_breakdown
 from repro.core.costmodel import CostModel
 from repro.core.lifecycle import (Breakdown, Container, ContainerState,
                                   FunctionSpec)
+from repro.core.metrics import QoSLedger
 from repro.fleet.frontend import Request
 
 
 @dataclass
 class Replica:
-    """One warm-capable unit of a function: a Container plus slots/engine."""
+    """One warm-capable unit of a function: a kernel Container plus the
+    engine object (when the backend is real).  Slot accounting lives on the
+    Container itself so the kernel owns it."""
 
     container: Container
     spec: FunctionSpec
-    slots: int = 1
-    inflight: int = 0
     engine: Optional[object] = None      # real InferenceEngine when EngineBackend
 
     @property
@@ -55,6 +63,14 @@ class Replica:
     def state(self) -> ContainerState:
         return self.container.state
 
+    @property
+    def slots(self) -> int:
+        return self.container.concurrency
+
+    @property
+    def inflight(self) -> int:
+        return self.container.inflight
+
 
 # --------------------------------------------------------------------------- #
 # execution backends
@@ -65,11 +81,13 @@ class ExecutionBackend:
     """Where a replica's startup and execution durations come from."""
 
     def provision(self, replica: Replica, *, from_snapshot: bool,
-                  concurrent_colds: int, deps_fraction: float) -> Breakdown:
+                  concurrent_colds: int, deps_fraction: float,
+                  speed: float = 1.0) -> Breakdown:
         raise NotImplementedError
 
     def execute(self, replica: Replica, requests: Sequence[Request], *,
-                first_run_penalty: float = 0.0) -> float:
+                first_run_penalty: float = 0.0,
+                speed: float = 1.0) -> float:
         """Seconds to serve ``requests`` as one micro-batch on one slot."""
         raise NotImplementedError
 
@@ -82,7 +100,8 @@ class ModeledBackend(ExecutionBackend):
 
     Micro-batching follows the usual sub-linear accelerator scaling: a batch
     of k costs ``exec_time * (1 + batch_alpha * (k - 1))`` rather than k
-    serial executions.
+    serial executions.  ``speed`` is the worker's heterogeneity factor
+    (execution and startup scale by 1/speed).
     """
 
     def __init__(self, cost_model: Optional[CostModel] = None,
@@ -91,16 +110,19 @@ class ModeledBackend(ExecutionBackend):
         self.batch_alpha = batch_alpha
 
     def provision(self, replica: Replica, *, from_snapshot: bool,
-                  concurrent_colds: int, deps_fraction: float) -> Breakdown:
-        return self.cost_model.breakdown(
+                  concurrent_colds: int, deps_fraction: float,
+                  speed: float = 1.0) -> Breakdown:
+        bd = self.cost_model.breakdown(
             replica.spec, concurrent_colds=concurrent_colds,
             from_snapshot=from_snapshot, deps_fraction=deps_fraction)
+        return scale_breakdown(bd, speed)
 
     def execute(self, replica: Replica, requests: Sequence[Request], *,
-                first_run_penalty: float = 0.0) -> float:
+                first_run_penalty: float = 0.0,
+                speed: float = 1.0) -> float:
         base = self.cost_model.exec_time(replica.spec,
                                          first_run_penalty=first_run_penalty)
-        return base * (1.0 + self.batch_alpha * (len(requests) - 1))
+        return base * (1.0 + self.batch_alpha * (len(requests) - 1)) / speed
 
 
 @dataclass
@@ -115,7 +137,8 @@ class EngineProfile:
 
 
 class EngineBackend(ExecutionBackend):
-    """Real JAX engines; durations are measured, not modeled."""
+    """Real JAX engines; durations are measured, not modeled (``speed`` is
+    therefore ignored — a real worker is as fast as it is)."""
 
     def __init__(self, store=None, profiles: Optional[Dict[str, EngineProfile]] = None):
         self.store = store
@@ -128,7 +151,8 @@ class EngineBackend(ExecutionBackend):
         return prof
 
     def provision(self, replica: Replica, *, from_snapshot: bool,
-                  concurrent_colds: int, deps_fraction: float) -> Breakdown:
+                  concurrent_colds: int, deps_fraction: float,
+                  speed: float = 1.0) -> Breakdown:
         from repro.serving.engine import InferenceEngine
         prof = self.profile(replica.function)
         engine = InferenceEngine(prof.arch, smoke=prof.smoke,
@@ -138,7 +162,8 @@ class EngineBackend(ExecutionBackend):
         return engine.cold_start(from_snapshot=from_snapshot)
 
     def execute(self, replica: Replica, requests: Sequence[Request], *,
-                first_run_penalty: float = 0.0) -> float:
+                first_run_penalty: float = 0.0,
+                speed: float = 1.0) -> float:
         """Serve a micro-batch on the real engine.
 
         The engine is compiled at a fixed (batch, max_seq) shape, so a
@@ -177,34 +202,60 @@ class EngineBackend(ExecutionBackend):
 
 
 class EnginePool:
-    """Replica registry with worker-level memory accounting."""
+    """Replica registry over the shared cluster kernel.
+
+    All container/memory state is delegated to
+    :class:`~repro.core.cluster.ClusterState`; the pool maps container ids
+    to :class:`Replica` objects (engine handles) and routes startup /
+    teardown through the :class:`ExecutionBackend`.
+    """
 
     def __init__(self, functions: Dict[str, FunctionSpec], *,
-                 num_workers: int = 4, worker_memory_mb: float = 16_384.0,
+                 num_workers: int = 4,
+                 worker_memory_mb: Union[float, Sequence[float]] = 16_384.0,
+                 worker_speed: Union[float, Sequence[float]] = 1.0,
                  backend: Optional[ExecutionBackend] = None,
-                 slots_per_replica: int = 1):
-        self.functions = functions
-        self.num_workers = num_workers
-        self.worker_memory_mb = worker_memory_mb
+                 slots_per_replica: int = 1,
+                 ledger: Optional[QoSLedger] = None):
         self.backend = backend or ModeledBackend()
-        self.slots_per_replica = slots_per_replica
+        self.state = ClusterState(
+            functions, num_workers=num_workers,
+            worker_memory_mb=worker_memory_mb, worker_speed=worker_speed,
+            ledger=ledger, default_concurrency=slots_per_replica,
+            on_destroy=self._teardown)
         self.replicas: Dict[int, Replica] = {}
-        self.worker_used: List[float] = [0.0] * num_workers
-        self._cid = itertools.count()
-        self.snapshots: set = set()        # functions with a snapshot baked
         self.phase_log: List[Breakdown] = []
 
-    # -- container views (the policy vocabulary) ------------------------- #
+    def _teardown(self, container: Container) -> None:
+        replica = self.replicas.pop(container.id, None)
+        if replica is not None:
+            self.backend.release(replica)
+
+    # -- kernel views (the policy vocabulary) ----------------------------- #
+    @property
+    def functions(self) -> Dict[str, FunctionSpec]:
+        return self.state.functions
+
+    @property
+    def num_workers(self) -> int:
+        return self.state.num_workers
+
+    @property
+    def worker_used(self) -> List[float]:
+        return self.state.worker_used
+
+    @property
+    def snapshots(self) -> set:
+        return self.state.snapshots
+
     def containers(self) -> Iterable[Container]:
         return (r.container for r in self.replicas.values())
 
     def warm_idle(self, function: str) -> List[Container]:
-        return [r.container for r in self.replicas.values()
-                if r.container.is_reusable(function)]
+        return self.state.warm_idle(function)
 
     def all_warm_idle(self) -> List[Container]:
-        return [r.container for r in self.replicas.values()
-                if r.container.state == ContainerState.WARM_IDLE]
+        return self.state.all_warm_idle()
 
     def replica_for(self, container_or_id) -> Optional[Replica]:
         cid = getattr(container_or_id, "id", container_or_id)
@@ -212,51 +263,35 @@ class EnginePool:
 
     def free_slot_replica(self, function: str) -> Optional[Replica]:
         """An ACTIVE replica that can take one more concurrent execution."""
-        best = None
-        for r in self.replicas.values():
-            if (r.function == function
-                    and r.container.state == ContainerState.ACTIVE
-                    and r.inflight < r.slots):
-                if best is None or r.inflight < best.inflight:
-                    best = r
-        return best
+        c = self.state.free_slot(function)
+        return None if c is None else self.replicas.get(c.id)
 
     def free_mb(self, worker: int) -> float:
-        return self.worker_memory_mb - self.worker_used[worker]
+        return self.state.free_mb(worker)
 
     def active_count(self, function: str) -> int:
-        return sum(1 for r in self.replicas.values()
-                   if r.function == function
-                   and r.container.state in (ContainerState.ACTIVE,
-                                             ContainerState.PROVISIONING))
+        return self.state.active_count(function)
 
     def concurrent_colds(self, worker: int) -> int:
-        return sum(1 for r in self.replicas.values()
-                   if r.container.worker == worker
-                   and r.container.state == ContainerState.PROVISIONING)
+        return self.state.provisioning_on(worker)
 
     # -- lifecycle ------------------------------------------------------- #
     def start_replica(self, function: str, worker: int, now: float, *,
                       from_snapshot: bool = False,
                       deps_fraction: float = 1.0) -> Tuple[Replica, Breakdown]:
-        fn = self.functions[function]
-        cid = next(self._cid)
-        c = Container(id=cid, function=function,
-                      state=ContainerState.PROVISIONING, worker=worker,
-                      memory_mb=fn.memory_mb, created_at=now,
-                      has_snapshot=from_snapshot)
-        replica = Replica(container=c, spec=fn, slots=self.slots_per_replica)
-        self.replicas[cid] = replica
-        self.worker_used[worker] += fn.memory_mb
+        c = self.state.admit(function, worker, now,
+                             has_snapshot=from_snapshot)
+        replica = Replica(container=c, spec=self.state.functions[function])
+        self.replicas[c.id] = replica
         bd = self.backend.provision(
             replica, from_snapshot=from_snapshot,
-            concurrent_colds=self.concurrent_colds(worker) - 1,
-            deps_fraction=deps_fraction)
+            concurrent_colds=self.state.provisioning_on(worker) - 1,
+            deps_fraction=deps_fraction,
+            speed=self.state.speed(worker))
         self.phase_log.append(bd)
         return replica, bd
 
     def release(self, replica: Replica) -> None:
-        self.backend.release(replica)
-        self.worker_used[replica.container.worker] -= replica.container.memory_mb
-        replica.container.state = ContainerState.DEAD
-        self.replicas.pop(replica.id, None)
+        """Destroy a replica (idle accounting + memory + engine teardown all
+        via the kernel's destroy path)."""
+        self.state.destroy(replica.container, self.state.now)

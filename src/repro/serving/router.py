@@ -20,13 +20,13 @@ from typing import Dict, Optional, Tuple
 import numpy as np
 
 from repro.core.costmodel import CostModel
-from repro.core.lifecycle import Breakdown, ContainerState, FunctionSpec
+from repro.core.lifecycle import Breakdown, FunctionSpec
 from repro.core.metrics import QoSLedger, RequestRecord
 from repro.core.policies.base import PolicySuite, Startup
 from repro.core.policies.keepalive import FixedTTL
 from repro.fleet.autoscaler import Autoscaler, FleetContext
 from repro.fleet.frontend import Frontend
-from repro.fleet.pool import EngineBackend, EnginePool, EngineProfile, Replica
+from repro.fleet.pool import EngineBackend, EnginePool, EngineProfile
 from repro.serving.engine import SnapshotStore
 
 
@@ -55,13 +55,14 @@ class ServerlessRouter:
             startup=Startup(snapshot=use_snapshots))
         self.functions: Dict[str, FunctionDef] = {}
         self.backend = EngineBackend(store=self.store)
+        self.ledger = QoSLedger()
         self.pool = EnginePool({}, num_workers=1,
                                worker_memory_mb=memory_budget_gb * 1024.0,
-                               backend=self.backend)
+                               backend=self.backend, ledger=self.ledger)
+        self.state = self.pool.state          # the shared cluster kernel
         self.autoscaler = Autoscaler(self.suite)
         self._frontend = Frontend()           # empty; satisfies FleetContext
         self._cost_model = CostModel()
-        self.ledger = QoSLedger()
         self._t0 = time.monotonic()
 
     # ------------------------------------------------------------------ #
@@ -75,7 +76,11 @@ class ServerlessRouter:
             decode_steps=fdef.decode_steps)
 
     def _now(self) -> float:
-        return time.monotonic() - self._t0
+        now = time.monotonic() - self._t0
+        # keep the kernel clock in step so its idle/eviction accounting
+        # uses wall time (the router has no event loop of its own)
+        self.state.now = max(self.state.now, now)
+        return now
 
     def _ctx(self, now: float) -> FleetContext:
         return FleetContext(self.pool, self._frontend, self._cost_model, now,
@@ -84,27 +89,19 @@ class ServerlessRouter:
     # ------------------------------------------------------------------ #
     def _scale_to_zero(self, now: float):
         """Lazy TTL enforcement + budget-pressure eviction in policy order."""
-        for replica in list(self.pool.replicas.values()):
-            c = replica.container
-            if c.state == ContainerState.WARM_IDLE and now >= c.expiry:
+        for c in list(self.state.all_warm_idle()):
+            if now >= c.expiry:
                 self.autoscaler.on_expire(c, now, now - c.warm_since)
-                self._release(replica, now)
+                self.state.destroy(c, now)
         self._reclaim(now, 0.0)
 
     def _reclaim(self, now: float, need_mb: float):
         """Evict warm replicas in policy order until ``need_mb`` fits."""
-        while self.pool.free_mb(0) < need_mb:
+        while self.state.free_mb(0) < need_mb:
             order = self.autoscaler.evict_order(self._ctx(now))
             if not order:
                 break
-            self._release(self.pool.replica_for(order[0]), now)
-
-    def _release(self, replica: Replica, now: float):
-        c = replica.container
-        if c.state == ContainerState.WARM_IDLE:
-            self.ledger.add_idle(max(now - c.warm_since, 0.0),
-                                 c.memory_mb / 1024.0)
-        self.pool.release(replica)
+            self.state.destroy(order[0], now)
 
     # ------------------------------------------------------------------ #
     def invoke(self, name: str, tokens: Optional[np.ndarray] = None,
@@ -119,9 +116,7 @@ class ServerlessRouter:
         c = self.suite.placement.choose_container(name, ctx)
         if c is not None:
             replica = self.pool.replica_for(c)
-            idle = arrival - c.warm_since
-            self.ledger.add_idle(max(idle, 0.0), c.memory_mb / 1024.0)
-            self.autoscaler.on_reuse(c, ctx, idle)
+            self.autoscaler.on_reuse(c, ctx, arrival - c.warm_since)
         else:
             cold = True
             self.autoscaler.on_miss(name, arrival)
@@ -129,11 +124,8 @@ class ServerlessRouter:
             self._reclaim(arrival, fn.memory_mb)
             replica, breakdown = self.pool.start_replica(
                 name, 0, arrival, from_snapshot=self.use_snapshots)
-            self.ledger.containers_launched += 1
         c = replica.container
-        c.state = ContainerState.ACTIVE
-        c.uses += 1
-        replica.inflight += 1
+        self.state.acquire(c, arrival)
         if tokens is None:
             tokens = np.ones((fdef.batch, fdef.max_seq), np.int32)
         start = self._now()
@@ -141,14 +133,13 @@ class ServerlessRouter:
                                     decode_steps=fdef.decode_steps,
                                     extras=extras)
         end = self._now()
-        replica.inflight -= 1
-        c.state = ContainerState.WARM_IDLE
-        c.warm_since = end
-        c.last_used = end
-        c.expiry = end + self.autoscaler.ttl_for(c, self._ctx(end))
-        rec = RequestRecord(name, arrival, start, end, cold=cold,
-                            startup=breakdown)
-        self.ledger.record(rec, memory_gb=fdef.memory_gb)
+        self.state.release_slot(c, end)
+        self.state.to_idle(c, end)
+        self.state.set_expiry(c, end + self.autoscaler.ttl_for(
+            c, self._ctx(end)))
+        self.state.record_execution(c, [(name, arrival)], start, end,
+                                    cold=cold, bd=breakdown)
+        rec = self.ledger.records[-1]
         return out, rec
 
     def summary(self) -> Dict[str, float]:

@@ -1,0 +1,99 @@
+"""Workload-generator tests: seed determinism for every family, invocation
+ordering after ``Trace.__post_init__``, and chain successor semantics."""
+import dataclasses
+
+import pytest
+
+from repro.core.workload import (ALL_GENERATORS, Invocation, Trace, azure_like,
+                                 bursty, chains, diurnal, flash_crowd,
+                                 interarrival_series, poisson, rare)
+
+# every family invoked with small, fast arguments
+FAMILY_ARGS = {
+    "poisson": dict(rate=2.0, horizon=30.0, num_functions=4),
+    "bursty": dict(base_rate=0.5, burst_rate=10.0, horizon=30.0,
+                   num_functions=3),
+    "diurnal": dict(peak_rate=5.0, horizon=30.0, num_functions=3),
+    "flash_crowd": dict(base_rate=0.5, spike_rate=20.0, horizon=30.0,
+                        num_functions=3),
+    "rare": dict(inter_arrival=5.0, horizon=60.0, num_functions=3),
+    "chains": dict(rate=1.0, horizon=30.0, chain_len=3),
+    "azure_like": dict(horizon=30.0, num_functions=10),
+}
+
+
+@pytest.mark.parametrize("family", sorted(ALL_GENERATORS))
+def test_same_seed_same_trace(family):
+    gen, kw = ALL_GENERATORS[family], FAMILY_ARGS[family]
+    a = gen(seed=7, **kw)
+    b = gen(seed=7, **kw)
+    assert a.invocations == b.invocations
+    assert a.functions == b.functions
+    assert a.horizon == b.horizon
+
+
+@pytest.mark.parametrize("family", sorted(ALL_GENERATORS))
+def test_different_seed_different_trace(family):
+    gen, kw = ALL_GENERATORS[family], FAMILY_ARGS[family]
+    a = gen(seed=7, **kw)
+    b = gen(seed=8, **kw)
+    assert a.invocations != b.invocations
+
+
+@pytest.mark.parametrize("family", sorted(ALL_GENERATORS))
+def test_invocations_sorted_and_inside_horizon(family):
+    gen, kw = ALL_GENERATORS[family], FAMILY_ARGS[family]
+    tr = gen(seed=3, **kw)
+    assert tr.invocations, family
+    times = [i.time for i in tr.invocations]
+    assert times == sorted(times)           # Trace.__post_init__ sorts
+    assert all(0.0 <= t < tr.horizon for t in times)
+    assert all(i.function in tr.functions for i in tr.invocations)
+
+
+def test_post_init_sorts_out_of_order_invocations():
+    fns = poisson(rate=1.0, horizon=10.0, seed=0).functions
+    tr = Trace([Invocation(5.0, "fn0"), Invocation(1.0, "fn0"),
+                Invocation(3.0, "fn0")], fns, 10.0)
+    assert [i.time for i in tr.invocations] == [1.0, 3.0, 5.0]
+    assert tr.rate == pytest.approx(0.3)
+
+
+def test_chain_successor_semantics():
+    tr = chains(rate=1.0, horizon=30.0, chain_len=3, seed=4)
+    names = list(tr.functions)
+    # specs are linked stage_i -> (stage_{i+1},); the last stage terminates
+    for i, name in enumerate(names[:-1]):
+        assert tr.functions[name].chain == (names[i + 1],)
+    assert tr.functions[names[-1]].chain is None
+    # every root invocation targets stage0 and carries the full remainder
+    for inv in tr.invocations:
+        assert inv.function == names[0]
+        assert inv.chain == tuple(names[1:])
+
+
+def test_generator_kwargs_flow_into_specs():
+    tr = poisson(rate=1.0, horizon=10.0, num_functions=2, seed=0,
+                 memory_mb=2048.0, container_concurrency=4, runtime="node")
+    for fn in tr.functions.values():
+        assert fn.memory_mb == 2048.0
+        assert fn.container_concurrency == 4
+        assert fn.runtime == "node"
+
+
+def test_interarrival_series_matches_per_function_times():
+    tr = rare(inter_arrival=5.0, horizon=100.0, num_functions=2, seed=1)
+    name = next(iter(tr.functions))
+    gaps = interarrival_series(tr, name)
+    times = [i.time for i in tr.invocations if i.function == name]
+    assert len(gaps) == len(times) - 1
+    assert all(g > 0 for g in gaps)
+
+
+def test_azure_like_spans_hot_and_cold_functions():
+    tr = azure_like(300.0, num_functions=30, seed=5)
+    counts = {}
+    for inv in tr.invocations:
+        counts[inv.function] = counts.get(inv.function, 0) + 1
+    # log-uniform rates over ~4 decades: some functions hot, some near-silent
+    assert max(counts.values()) > 50 * max(1, min(counts.values()))
