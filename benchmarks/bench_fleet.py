@@ -102,27 +102,45 @@ def run(emit):
 
     # -- 3b. scenario calibration: the kernel-backed scenarios must also
     #        replay ledger-identically (concurrency>1, heterogeneous
-    #        workers) — same trace through both drivers, delta per metric - #
+    #        workers, warmth-tier ladders, generic pause pools) — same
+    #        trace through both drivers, delta per metric ---------------- #
     from repro.core.workload import flash_crowd as _fc, poisson as _poisson
     scenarios = {
         "concurrency4": (
             _fc(base_rate=0.5, spike_rate=30.0, horizon=120.0,
                 num_functions=2, seed=1, container_concurrency=4),
+            "provider_default",
             dict(num_workers=2, worker_memory_mb=4096.0)),
         "heterogeneous": (
             _poisson(rate=2.0, horizon=200.0, num_functions=6, seed=3),
+            "provider_default",
             dict(num_workers=3, worker_memory_mb=[8192.0, 4096.0, 2048.0],
                  worker_speed=[1.0, 0.5, 2.0])),
+        "tiered_fixed": (
+            azure_like(300.0, num_functions=12, seed=7), "tiered_fixed",
+            dict(num_workers=2, worker_memory_mb=8192.0)),
+        "tiered_spes": (
+            azure_like(300.0, num_functions=12, seed=7), "tiered_spes",
+            dict(num_workers=2, worker_memory_mb=8192.0)),
+        "pause_pool": (
+            azure_like(300.0, num_functions=12, seed=7), "pause_pool",
+            dict(num_workers=2, worker_memory_mb=8192.0)),
     }
-    for label, (trace, kw) in scenarios.items():
-        sim_s = simulate(trace, suite("provider_default"), cost_model=cm,
+    tier_deltas = []
+    for label, (trace, pol, kw) in scenarios.items():
+        sim_s = simulate(trace, suite(pol), cost_model=cm,
                          cfg=SimConfig(**kw)).summary()
-        fleet_s = replay(trace, suite("provider_default"), cost_model=cm,
+        fleet_s = replay(trace, suite(pol), cost_model=cm,
                          cfg=FleetConfig(**kw)).summary()
-        for key in ("latency_p95_s", "cold_start_frequency", "idle_gb_s"):
+        for key in ("latency_p95_s", "cold_start_frequency", "idle_gb_s",
+                    "promotions", "demotions"):
             delta = fleet_s[key] - sim_s[key]
+            if label.startswith(("tiered", "pause")):
+                tier_deltas.append((label, key, delta))
             emit(f"fleet/calibration_{label}/{key}", abs(delta) * 1e6,
                  f"sim={sim_s[key]:.4f} fleet={fleet_s[key]:.4f}")
+    assert all(d == 0 for _, _, d in tier_deltas), \
+        f"sim-vs-fleet tier calibration drift: {tier_deltas}"
 
     # -- 4. acceptance gate: predictor-driven dominates fixed TTL --------- #
     tr = TRACES["azure_like"]()
@@ -138,3 +156,49 @@ def run(emit):
          f"cold%={pred['cold_start_frequency'] * 100:.2f}"
          f"-vs-{fixed['cold_start_frequency'] * 100:.2f} "
          f"idle={pred['idle_gb_s']:.0f}-vs-{fixed['idle_gb_s']:.0f}")
+
+
+def tier_smoke() -> int:
+    """Fast CI gate: a warmth-tiered suite (PAUSED + SNAPSHOT_READY tiers
+    exercised) replayed through the simulator and the fleet on a virtual
+    clock must produce field-for-field identical ledger summaries."""
+    import math
+
+    cm = _cost_model()
+    tr = azure_like(300.0, num_functions=12, seed=7)
+    bad = []
+    for pol in ("tiered_fixed", "tiered_spes", "pause_pool"):
+        sim_s = simulate(tr, suite(pol), cost_model=cm,
+                         cfg=SimConfig(num_workers=2,
+                                       worker_memory_mb=8192.0)).summary()
+        fleet_s = replay(tr, suite(pol), cost_model=cm,
+                         cfg=FleetConfig(num_workers=2,
+                                         worker_memory_mb=8192.0)).summary()
+        assert sim_s["demotions"] > 0 or pol == "pause_pool", \
+            f"{pol}: ladder never engaged"
+        for k in set(sim_s) | set(fleet_s):
+            a, b = sim_s.get(k), fleet_s.get(k)
+            same = (a == b or (isinstance(a, float) and isinstance(b, float)
+                               and math.isnan(a) and math.isnan(b)))
+            if not same:
+                bad.append((pol, k, a, b))
+    if bad:
+        print("FAIL: sim-vs-fleet tiered ledger drift:")
+        for row in bad:
+            print("  ", row)
+        return 1
+    print("ok: tiered sim-vs-fleet ledgers identical "
+          "(tiered_fixed, tiered_spes, pause_pool)")
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+
+    if "--tier-smoke" in sys.argv:
+        sys.exit(tier_smoke())
+
+    def _emit(name, value, derived=""):
+        print(f"{name},{value:.1f},{derived}", flush=True)
+
+    run(_emit)

@@ -29,6 +29,9 @@ from repro.core.policies import suite
 from repro.core.simulator import SimConfig, simulate
 from repro.core.workload import azure_like
 
+PLACEMENT_WORKERS = 2000     # worker count for the placement-index row
+PLACEMENT_QUERIES = 2000
+
 # (num_functions, horizon_s): horizons shrink as rates grow so every scale
 # replays a comparable number of invocations (~15-25k).
 SCALES = ((100, 360.0), (500, 75.0), (2000, 20.0))
@@ -66,6 +69,47 @@ def _one(num_functions: int, horizon: float) -> dict:
     }
 
 
+def _placement_row(emit):
+    """O(W) scan vs the kernel's O(log W) free-capacity index for
+    ``Placement.choose_worker`` at ``PLACEMENT_WORKERS`` workers.
+
+    The fill pattern front-loads nearly-full workers so a naive first-fit
+    scan walks most of the cluster per query — the regime the index
+    removes from the dispatch path at 2000-function scale."""
+    from repro.core.cluster import ClusterState
+    from repro.core.lifecycle import FunctionSpec
+
+    w = PLACEMENT_WORKERS
+    fns = {"fn0": FunctionSpec(name="fn0", package_mb=64.0,
+                               memory_mb=1024.0)}
+    st = ClusterState(fns, num_workers=w, worker_memory_mb=2048.0)
+    for i in range(w - 1):                    # all but the last nearly full
+        st.reserve(i, 1536.0)
+    need = 1024.0
+
+    t0 = time.perf_counter()
+    for _ in range(PLACEMENT_QUERIES):
+        hit = None
+        for i in range(w):
+            if st.free_mb(i) >= need:
+                hit = i
+                break
+    scan_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    for _ in range(PLACEMENT_QUERIES):
+        idx_hit = st.first_fit_worker(need)
+    index_s = time.perf_counter() - t0
+
+    assert hit == idx_hit == w - 1
+    speedup = scan_s / index_s if index_s else float("inf")
+    emit(f"simcore/placement/{w}workers/first_fit_index_us",
+         index_s / PLACEMENT_QUERIES * 1e6,
+         f"scan={scan_s / PLACEMENT_QUERIES * 1e6:.1f}us "
+         f"speedup={speedup:.0f}x")
+    return speedup
+
+
 def run(emit, *, scales=SCALES, json_path="BENCH_simcore.json"):
     results = []
     for n, horizon in scales:
@@ -73,6 +117,7 @@ def run(emit, *, scales=SCALES, json_path="BENCH_simcore.json"):
         results.append(r)
         emit(f"simcore/azure_like/{n}fns/events_per_s", r["events_per_s"],
              f"inv={r['invocations']} wall={r['wall_s']:.2f}s")
+    _placement_row(emit)
     with open(json_path, "w") as f:
         json.dump(results, f, indent=2)
     return results

@@ -22,8 +22,10 @@ def run(emit):
              f"waste_gb_s={s['idle_gb_s']:.1f} (freq%*1e6)")
 
     # --- predictor accuracy on a noisy arrival process -------------------- #
-    hot = max(set(i.function for i in tr.invocations),
-              key=lambda f: sum(1 for i in tr.invocations if i.function == f))
+    # hot function + its gap series come from the trace's cached
+    # per-function time index (one pass, not a rescan per function)
+    counts = tr.counts_by_function()
+    hot = max(counts, key=counts.get)
     times = np.cumsum(interarrival_series(tr, hot))
     preds = {
         "ewma": EWMAPredictor(),

@@ -9,9 +9,14 @@ Prints ``name,us_per_call,derived`` CSV.  Modules:
   bench_serving    serving microbenchmarks + compile-time (scan vs unroll)
   bench_fleet      fleet replay: predictive autoscaling vs fixed TTL + the
                    sim-vs-fleet calibration loop (virtual clock)
+  bench_tiers      warmth-tier ladder Pareto sweep: graded demotion
+                   schedules vs binary fixed-TTL keep-alive
   bench_simcore    simulator replay throughput (events/sec vs function
                    count; writes BENCH_simcore.json — the perf trajectory)
   bench_roofline   dry-run/roofline summary (deliverables e+g)
+
+Exits nonzero when any module raises (its row is tagged ERROR), so CI and
+scripts can gate on the whole harness.
 """
 import sys
 import time
@@ -19,7 +24,8 @@ import traceback
 
 from benchmarks import (bench_csf, bench_csl, bench_factors, bench_fleet,
                         bench_platforms, bench_qos, bench_roofline,
-                        bench_serving, bench_simcore, bench_tradeoffs)
+                        bench_serving, bench_simcore, bench_tiers,
+                        bench_tradeoffs)
 
 MODULES = [
     ("factors", bench_factors),
@@ -30,18 +36,20 @@ MODULES = [
     ("platforms", bench_platforms),
     ("serving", bench_serving),
     ("fleet", bench_fleet),
+    ("tiers", bench_tiers),
     ("simcore", bench_simcore),
     ("roofline", bench_roofline),
 ]
 
 
-def main() -> None:
+def main() -> int:
     only = sys.argv[1] if len(sys.argv) > 1 else None
     print("name,us_per_call,derived")
 
     def emit(name: str, us: float, derived: str = ""):
         print(f"{name},{us:.1f},{derived}", flush=True)
 
+    failed = []
     for name, mod in MODULES:
         if only and only != name:
             continue
@@ -53,7 +61,11 @@ def main() -> None:
             traceback.print_exc()
             emit(f"_module/{name}/wall", (time.perf_counter() - t0) * 1e6,
                  "ERROR")
+            failed.append(name)
+    if failed:
+        print(f"FAILED modules: {', '.join(failed)}", file=sys.stderr)
+    return 1 if failed else 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -24,9 +24,9 @@ from __future__ import annotations
 import json
 import math
 from dataclasses import dataclass, field, replace
-from typing import Dict, Optional
+from typing import Dict, Optional, Tuple
 
-from repro.core.lifecycle import Breakdown, FunctionSpec, Phase
+from repro.core.lifecycle import (Breakdown, FunctionSpec, Phase, WarmthTier)
 
 RUNTIME_INIT_S = {
     "python-eager": 0.45,   # import numpy/jax, no trace
@@ -34,6 +34,18 @@ RUNTIME_INIT_S = {
     "node": 0.15,
     "go": 0.05,
     "aot": 0.05,            # restored process image
+}
+
+# Fraction of the container's RAM allocation billed while it sits in each
+# warmth tier.  A frozen cgroup keeps its pages but can be swapped/compressed
+# (PCPM/SPES magnitudes); a written snapshot leaves only metadata + page
+# cache residue; a cached image and a dead function bill nothing.
+TIER_FOOTPRINT_FRAC = {
+    WarmthTier.WARM_IDLE: 1.0,
+    WarmthTier.PAUSED: 0.125,
+    WarmthTier.SNAPSHOT_READY: 0.02,
+    WarmthTier.IMG_CACHED: 0.0,
+    WarmthTier.DEAD: 0.0,
 }
 
 
@@ -51,6 +63,13 @@ class CostModel:
     pause_pool_skip: tuple = (Phase.PROVISION, Phase.RUNTIME_INIT)
     contention_alpha: float = 0.35        # cold-start inflation per extra
                                           # concurrent cold start on a worker
+    # ---- warmth-tier ladder (graded container lifetimes) --------------- #
+    resume_paused_s: float = 0.015        # cgroup thaw (PCPM: O(10ms))
+    snapshot_write_s: float = 0.050       # demote cost: write the mem image
+    img_cached_provision_frac: float = 0.4  # image already pulled: only the
+                                            # sandbox/cgroup setup remains
+    tier_footprint_frac: Dict[WarmthTier, float] = field(
+        default_factory=lambda: dict(TIER_FOOTPRINT_FRAC))
 
     # ------------------------------------------------------------------ #
     def _cpu_scale(self, memory_mb: float) -> float:
@@ -93,6 +112,77 @@ class CostModel:
     def exec_time(self, fn: FunctionSpec, *, first_run_penalty: float = 0.0) -> float:
         """Warm execution time; CPU scales with the RAM allocation."""
         return fn.exec_time_s / self._cpu_scale(fn.memory_mb) + first_run_penalty
+
+    # ------------------------------------------------------------------ #
+    # warmth-tier ladder: footprints + the tier-transition cost matrix
+    # ------------------------------------------------------------------ #
+    def tier_footprint_mb(self, fn: FunctionSpec, tier: WarmthTier) -> float:
+        """RAM billed while ``fn``'s container sits in ``tier``."""
+        return fn.memory_mb * self.tier_footprint_frac.get(tier, 1.0)
+
+    def promote_breakdown(self, fn: FunctionSpec, tier: WarmthTier, *,
+                          concurrent_colds: int = 0,
+                          deps_fraction: float = 1.0,
+                          from_pause_pool: bool = False) -> Breakdown:
+        """Phase costs to bring a container *from* ``tier`` to serving.
+
+        This is the single entry point for every startup path — the old
+        ``from_snapshot=`` / bare-``breakdown()`` call sites are the
+        ``SNAPSHOT_READY`` / ``DEAD`` rows of this matrix.  Promote cost is
+        exactly the Breakdown phases the tier has *not* already completed:
+
+          WARM_IDLE       nothing — the container is live
+          PAUSED          cgroup thaw only (everything resident)
+          SNAPSHOT_READY  restore the memory image (vHive semantics)
+          IMG_CACHED      full start minus the image pull
+          DEAD            the full cold-start anatomy
+
+        ``from_pause_pool`` layers the legacy *generic* pool on top (a
+        pooled container has a runtime but not the function, so it still
+        pays deps+code — distinct from the function-specific PAUSED tier).
+        """
+        if tier == WarmthTier.WARM_IDLE:
+            return Breakdown({})
+        if tier == WarmthTier.PAUSED:
+            return Breakdown({Phase.PROVISION: self.resume_paused_s})
+        if tier == WarmthTier.SNAPSHOT_READY:
+            return self.breakdown(fn, concurrent_colds=concurrent_colds,
+                                  from_snapshot=True,
+                                  from_pause_pool=from_pause_pool)
+        b = self.breakdown(fn, concurrent_colds=concurrent_colds,
+                           deps_fraction=deps_fraction,
+                           from_pause_pool=from_pause_pool)
+        if tier == WarmthTier.IMG_CACHED and Phase.PROVISION in b.seconds:
+            b = b.replace(Phase.PROVISION,
+                          b.seconds[Phase.PROVISION]
+                          * self.img_cached_provision_frac)
+        return b
+
+    def demote_cost_s(self, from_tier: WarmthTier,
+                      to_tier: WarmthTier) -> float:
+        """Seconds of work to move *down* the ladder (≈0 everywhere except
+        the snapshot write)."""
+        if (to_tier == WarmthTier.SNAPSHOT_READY
+                and from_tier > WarmthTier.SNAPSHOT_READY):
+            return self.snapshot_write_s
+        return 0.0
+
+    def transition_matrix(self, fn: FunctionSpec) \
+            -> Dict[Tuple[WarmthTier, WarmthTier], float]:
+        """(from, to) → seconds for every ladder edge: promote edges cost
+        the remaining startup phases, demote edges ≈0 or the snapshot
+        write.  Reporting/benchmark view of the ladder."""
+        tiers = sorted(WarmthTier)
+        out: Dict[Tuple[WarmthTier, WarmthTier], float] = {}
+        for a in tiers:
+            for b in tiers:
+                if a == b:
+                    continue
+                if b == WarmthTier.WARM_IDLE:        # promote to serving
+                    out[(a, b)] = self.promote_breakdown(fn, a).total
+                elif b < a:                           # demotion
+                    out[(a, b)] = self.demote_cost_s(a, b)
+        return out
 
     # ------------------------------------------------------------------ #
     @classmethod

@@ -31,8 +31,39 @@ class ContainerState(str, enum.Enum):
     PROVISIONING = "provisioning"
     WARM_IDLE = "warm_idle"          # ready; clock to scale-to-zero running
     ACTIVE = "active"                # executing a request
-    PAUSED = "paused"                # PCPM pause-pool: runtime up, no function
+    PAUSED = "paused"                # cgroup-frozen: everything resident, no CPU
+    SNAPSHOT_READY = "snapshot_ready"  # memory image written; tiny RAM residue
     DEAD = "dead"
+
+
+class WarmthTier(enum.IntEnum):
+    """The graded container-warmth ladder (§5's CSL spectrum as one axis).
+
+    Ordering is meaningful: a higher tier is warmer — cheaper to promote to
+    serving, more expensive to keep resident.  ``DEAD`` and ``IMG_CACHED``
+    are *function-level* spawn tiers (no container object backs them: the
+    image cache / snapshot file lives on the cluster, not in a cgroup);
+    ``SNAPSHOT_READY``, ``PAUSED``, and ``WARM_IDLE`` are container-resident
+    tiers, mirrored 1:1 by :class:`ContainerState` values.
+    """
+
+    DEAD = 0              # nothing resident: full cold start
+    IMG_CACHED = 1        # container image pulled: provisioning shortened
+    SNAPSHOT_READY = 2    # memory image on local disk: restore, not rebuild
+    PAUSED = 3            # frozen cgroup: runtime+weights+code resident
+    WARM_IDLE = 4         # live container: promote cost zero
+
+
+# resident idle tiers and their ContainerState twins, warmest first
+RESIDENT_TIERS = (WarmthTier.WARM_IDLE, WarmthTier.PAUSED,
+                  WarmthTier.SNAPSHOT_READY)
+TIER_TO_STATE = {
+    WarmthTier.WARM_IDLE: ContainerState.WARM_IDLE,
+    WarmthTier.PAUSED: ContainerState.PAUSED,
+    WarmthTier.SNAPSHOT_READY: ContainerState.SNAPSHOT_READY,
+}
+STATE_TO_TIER = {v: k for k, v in TIER_TO_STATE.items()}
+RESIDENT_IDLE_STATES = tuple(TIER_TO_STATE.values())
 
 
 @dataclass
@@ -89,14 +120,22 @@ class Container:
     worker: int
     memory_mb: float
     created_at: float
-    warm_since: float = 0.0
+    warm_since: float = 0.0           # start of the current idle-tier dwell
     last_used: float = 0.0
     uses: int = 0
-    expiry: float = float("inf")      # scale-to-zero deadline (policy-set)
+    expiry: float = float("inf")      # next armed tier transition (policy-set)
     has_snapshot: bool = False
     sanitized: bool = True            # paper §6.6: state cleared on reuse
     concurrency: int = 1              # simultaneous executions admitted
     inflight: int = 0                 # executions currently on this container
+    resident_mb: float = 0.0          # billed footprint at the current tier
+                                      # (kernel-maintained; == memory_mb
+                                      # outside the demoted idle tiers)
+
+    @property
+    def tier(self) -> Optional[WarmthTier]:
+        """The warmth tier while idle-resident, else None (busy/dead)."""
+        return STATE_TO_TIER.get(self.state)
 
     def is_reusable(self, function: str) -> bool:
         return (self.state == ContainerState.WARM_IDLE

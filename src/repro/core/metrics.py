@@ -47,10 +47,16 @@ def _pct(sorted_vals: List[float], q: float) -> float:
 @dataclass
 class QoSLedger:
     records: List[RequestRecord] = field(default_factory=list)
-    # GB-seconds consumed while containers sit warm-idle (wasted resources)
+    # GB-seconds consumed while containers sit idle-resident (wasted
+    # resources), total and split by warmth tier — a paused or
+    # snapshot-resident container bills its *tier footprint*, not its full
+    # allocation, so the per-tier split is the ladder's cost story
     idle_gb_s: float = 0.0
+    idle_gb_s_by_tier: Dict[str, float] = field(default_factory=dict)
     exec_gb_s: float = 0.0
     containers_launched: int = 0
+    promotions: int = 0               # resident-tier container resumed
+    demotions: int = 0                # ladder moves down (excl. death)
     dropped: int = 0
     horizon: float = 0.0
     cluster_capacity_gb: float = 0.0
@@ -62,8 +68,12 @@ class QoSLedger:
         self.exec_gb_s += (rec.end - rec.start) * memory_gb
         self._busy_gb_s += (rec.end - rec.arrival) * memory_gb
 
-    def add_idle(self, seconds: float, memory_gb: float):
-        self.idle_gb_s += seconds * memory_gb
+    def add_idle(self, seconds: float, memory_gb: float,
+                 tier: str = "warm_idle"):
+        gb_s = seconds * memory_gb
+        self.idle_gb_s += gb_s
+        self.idle_gb_s_by_tier[tier] = \
+            self.idle_gb_s_by_tier.get(tier, 0.0) + gb_s
 
     # ------------------------------------------------------------------ #
     def summary(self, *, sla_latency_s: Optional[float] = None) -> Dict[str, float]:
@@ -94,6 +104,12 @@ class QoSLedger:
             "cost_usd": (self.exec_gb_s + self.idle_gb_s) * PRICE_PER_GB_S
             + n * PRICE_PER_REQUEST,
             "dropped": float(self.dropped),
+            "promotions": float(self.promotions),
+            "demotions": float(self.demotions),
+            "idle_gb_s_warm": self.idle_gb_s_by_tier.get("warm_idle", 0.0),
+            "idle_gb_s_paused": self.idle_gb_s_by_tier.get("paused", 0.0),
+            "idle_gb_s_snapshot": self.idle_gb_s_by_tier.get(
+                "snapshot_ready", 0.0),
         }
         if sla_latency_s is not None and n:
             out["sla_violation_rate"] = (

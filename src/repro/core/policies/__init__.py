@@ -5,8 +5,11 @@
 """
 from __future__ import annotations
 
-from repro.core.policies.base import Placement, PolicySuite, Startup
+from repro.core.policies.base import (Lifetime, Placement, PolicySuite,
+                                      Startup)
 from repro.core.policies.keepalive import FixedTTL, GreedyDualKeepAlive, LCS
+from repro.core.policies.lifetime import (FixedLadder, KeepAliveLadder,
+                                          PredictiveLadder, RLLadder)
 from repro.core.policies.prewarm import (HybridPrewarm, PeriodicPing,
                                          RLKeepAlive, ewma_prewarm,
                                          histogram_prewarm, holt_prewarm,
@@ -64,6 +67,15 @@ _FACTORIES = {
                placement=lambda: CASPlacement()),
     "ensure": _mk("ensure", keepalive=lambda: FixedTTL(600.0),
                   prewarm=ENSUREScaling),
+    # --- graded warmth-tier ladders (Lifetime family) --------------------- #
+    # the binary fixed-TTL comparator for these is provider_short/default
+    "tiered_fixed": _mk("tiered_fixed", keepalive=lambda: FixedTTL(600.0),
+                        lifetime=lambda: FixedLadder(
+                            warm_s=45.0, paused_s=555.0, snapshot_s=1800.0),
+                        startup=Startup(img_cache=True)),
+    "tiered_spes": _mk("tiered_spes", keepalive=lambda: FixedTTL(600.0),
+                       lifetime=lambda: PredictiveLadder(),
+                       startup=Startup(img_cache=True)),
     # --- beyond-paper hybrids -------------------------------------------- #
     "hybrid_prewarm": _mk("hybrid_prewarm", keepalive=lambda: FixedTTL(60.0),
                           prewarm=HybridPrewarm),
@@ -73,6 +85,21 @@ _FACTORIES = {
                         startup=Startup(snapshot=True, pause_pool_size=4)),
 }
 
+
+def _tiered_rl(**kw) -> PolicySuite:
+    """RL keep-alive with the demote-not-die action space: one agent
+    instance serves both the keepalive slot (pressure eviction + reuse
+    feedback) and the ladder's warm-dwell decision."""
+    ka = RLKeepAlive()
+    f = dict(keepalive=ka, lifetime=RLLadder(ka),
+             startup=Startup(img_cache=True))
+    f.update(kw)
+    return PolicySuite(name="tiered_rl", **f)
+
+
+_FACTORIES["tiered_rl"] = _tiered_rl
+
 CATALOG = tuple(_FACTORIES)
 
-__all__ = ["suite", "CATALOG", "PolicySuite", "Startup"]
+__all__ = ["suite", "CATALOG", "PolicySuite", "Startup", "Lifetime",
+           "FixedLadder", "KeepAliveLadder", "PredictiveLadder", "RLLadder"]

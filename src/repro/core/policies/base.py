@@ -3,12 +3,16 @@
 A :class:`PolicySuite` bundles one choice from each mitigation family:
 
   keepalive   CSF: when does a warm container scale to zero (τ), and which
-              warm container is evicted first under memory pressure
+              idle container is evicted first under memory pressure
+  lifetime    CSF/CSL bridge: the graded warmth-tier ladder — *how* a
+              container cools (warm → paused → snapshot-resident → dead)
+              as a per-edge demotion schedule; a plain keep-alive TTL is
+              the binary special case (one warm → dead edge)
   prewarm     CSF: proactive container preparation (periodic ping,
               histogram/EWMA/Markov/LSTM/RL predictors)
   placement   CSF: request→worker scheduling (CAS lifecycle-awareness)
   startup     CSL: how a cold start is shortened (snapshot restore, pause
-              pool, partial dependency loading, runtime choice)
+              pool, image caching, partial dependency loading)
 
 Every policy sees one ``Context`` protocol —
 :class:`~repro.core.cluster.ClusterContext` — whether the cluster
@@ -21,12 +25,16 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, TYPE_CHECKING
+from typing import Dict, List, Optional, Sequence, Tuple, TYPE_CHECKING
 
-from repro.core.lifecycle import Container, FunctionSpec
+from repro.core.lifecycle import Container, FunctionSpec, WarmthTier
 
 if TYPE_CHECKING:
     from repro.core.cluster import ClusterContext
+
+# one demotion-schedule edge: (seconds to dwell in the *current* tier,
+# the tier to demote to when the dwell elapses)
+TierEdge = Tuple[float, WarmthTier]
 
 
 class KeepAlive:
@@ -46,6 +54,30 @@ class KeepAlive:
         pass
 
 
+class Lifetime:
+    """Graded container-lifetime policy: returns a *demotion schedule*.
+
+    ``schedule`` answers, for a container that just went idle: how long
+    does it dwell in each warmth tier before sliding down the ladder?
+    The returned edges are consumed in order by the drivers (simulator
+    and fleet identically), each edge re-armed only after the previous
+    demotion actually fires; any reuse or promotion cancels the rest.
+
+    ``[(60, PAUSED), (240, SNAPSHOT_READY), (1800, DEAD)]`` reads: stay
+    warm 60 s, then freeze; stay frozen 240 s, then write the snapshot
+    and drop to the disk tier; linger restorable for 1800 s, then die.
+    """
+
+    name = "lifetime"
+
+    def observe(self, function: str, t: float) -> None:
+        """Arrival feed (same stream prewarm policies see)."""
+
+    def schedule(self, container: Container,
+                 ctx: "ClusterContext") -> List[TierEdge]:
+        raise NotImplementedError
+
+
 class Prewarm:
     """Proactive warm-container preparation from invocation history."""
 
@@ -61,7 +93,12 @@ class Prewarm:
 
 
 class Placement:
-    """Request routing across workers (the scheduler of §5.3.2)."""
+    """Request routing across workers (the scheduler of §5.3.2).
+
+    Worker selection is served from the kernel's free-capacity index
+    (``ClusterContext.first_fit_worker`` / ``max_free_worker``), so the
+    default policies stay O(log W) at thousands of workers instead of
+    rescanning every worker per cold start."""
 
     name = "first-fit"
 
@@ -70,10 +107,7 @@ class Placement:
         return warm[0] if warm else None
 
     def choose_worker(self, fn: FunctionSpec, ctx: "ClusterContext") -> Optional[int]:
-        for w in range(ctx.num_workers):
-            if ctx.free_mb(w) >= fn.memory_mb:
-                return w
-        return None
+        return ctx.first_fit_worker(fn.memory_mb)
 
 
 @dataclass(frozen=True)
@@ -85,6 +119,8 @@ class Startup:
     pause_pool_mb: float = 128.0      # footprint of a paused container
     deps_fraction: float = 1.0        # FaaSLight partial load (<1.0)
     first_run_penalty_frac: float = 0.0  # deferred-load cost on first exec
+    img_cache: bool = False           # repeat spawns skip the image pull
+                                      # (IMG_CACHED rung of the ladder)
 
 
 @dataclass
@@ -94,9 +130,12 @@ class PolicySuite:
     prewarm: Optional[Prewarm] = None
     placement: Placement = field(default_factory=Placement)
     startup: Startup = field(default_factory=Startup)
+    lifetime: Optional[Lifetime] = None   # graded ladder; None = binary TTL
 
     def describe(self) -> str:
         bits = [f"keepalive={self.keepalive.name}"]
+        if self.lifetime:
+            bits.append(f"lifetime={self.lifetime.name}")
         if self.prewarm:
             bits.append(f"prewarm={self.prewarm.name}")
         bits.append(f"placement={self.placement.name}")
@@ -107,4 +146,6 @@ class PolicySuite:
             bits.append(f"pause_pool={st.pause_pool_size}")
         if st.deps_fraction < 1.0:
             bits.append(f"faaslight={st.deps_fraction}")
+        if st.img_cache:
+            bits.append("img_cache")
         return f"{self.name}({', '.join(bits)})"

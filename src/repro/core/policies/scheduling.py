@@ -24,12 +24,10 @@ class CASPlacement(Placement):
         return max(warm, key=lambda c: (c.uses, c.last_used))
 
     def choose_worker(self, fn: FunctionSpec, ctx) -> Optional[int]:
-        best, best_free = None, -1.0
-        for w in range(ctx.num_workers):
-            free = ctx.free_mb(w)
-            if free >= fn.memory_mb and free > best_free:
-                best, best_free = w, free
-        return best
+        # best-fit from the kernel's free-capacity index: O(log W), same
+        # semantics as the old scan (most free memory, ties to lowest id)
+        w, free = ctx.max_free_worker()
+        return w if free >= fn.memory_mb else None
 
 
 class ENSUREScaling(Prewarm):

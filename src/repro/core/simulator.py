@@ -37,7 +37,8 @@ from typing import Deque, Dict, List, Optional, Sequence, Union
 from repro.core.cluster import (ClusterContext, ClusterState, PolicyDriver,
                                 find_worker, scale_breakdown)
 from repro.core.costmodel import CostModel
-from repro.core.lifecycle import Breakdown, Container, FunctionSpec, Phase
+from repro.core.lifecycle import (Breakdown, Container, FunctionSpec, Phase,
+                                  WarmthTier)
 from repro.core.metrics import QoSLedger
 from repro.core.policies.base import PolicySuite
 from repro.core.workload import Invocation, Trace
@@ -79,11 +80,13 @@ class Simulator:
             num_workers=self.cfg.num_workers,
             worker_memory_mb=self.cfg.worker_memory_mb,
             worker_speed=self.cfg.worker_speed,
-            ledger=QoSLedger(horizon=trace.horizon))
+            ledger=QoSLedger(horizon=trace.horizon),
+            tier_footprint_frac=self.cost_model.tier_footprint_frac)
         self.state.ledger.cluster_capacity_gb = self.state.capacity_gb
         self.ledger = self.state.ledger
-        self.policy = PolicyDriver(suite,
-                                   rl_miss_window_s=self.cfg.rl_miss_window_s)
+        self.policy = PolicyDriver(
+            suite, rl_miss_window_s=self.cfg.rl_miss_window_s,
+            tier_footprint_frac=self.cost_model.tier_footprint_frac)
         self.queue: Deque[_Pending] = deque()
         self._queued_count: Dict[str, int] = defaultdict(int)
         self.pause_pool: int = 0            # available paused containers
@@ -145,11 +148,11 @@ class Simulator:
 
         # close out idle accounting at horizon
         self.state.close_out(self.trace.horizon)
-        # pause pool idle cost over whole horizon
+        # (legacy generic) pause pool idle cost over whole horizon
         if self.suite.startup.pause_pool_size:
             self.ledger.add_idle(
                 self.trace.horizon * self.suite.startup.pause_pool_size,
-                self.suite.startup.pause_pool_mb / 1024.0)
+                self.suite.startup.pause_pool_mb / 1024.0, tier="paused")
         return self.ledger
 
     # ------------------------------------------------------------------ #
@@ -171,6 +174,12 @@ class Simulator:
         c = self.state.free_slot(fn_name)
         if c is not None:
             self._begin_exec(c, pend, cold=False)
+            return
+        # warmth ladder: resume a demoted resident container (paused /
+        # snapshot-resident) — far cheaper than a fresh cold start
+        c = self.state.best_resident(fn_name)
+        if c is not None and self.state.can_promote(c):
+            self._promote(c, pend)
             return
         self.policy.on_miss(fn_name, self.now)
         worker = find_worker(self.state, fn, self.suite, ctx)
@@ -217,17 +226,30 @@ class Simulator:
             self.pause_pool -= 1
             self._push(self.now + self.cost_model.breakdown(fn).drop(
                 Phase.DEPS_LOAD, Phase.CODE_INIT).total, "pool_refill", None)
-        from_snap = st.snapshot and fn.name in self.state.snapshots
-        bd = self.cost_model.breakdown(
-            fn, concurrent_colds=self.state.provisioning_on(worker),
-            from_snapshot=from_snap, from_pause_pool=from_pool,
-            deps_fraction=st.deps_fraction if not from_snap else 1.0)
+        tier = self.state.spawn_tier(fn.name, img_cache=st.img_cache)
+        bd = self.cost_model.promote_breakdown(
+            fn, tier, concurrent_colds=self.state.provisioning_on(worker),
+            deps_fraction=st.deps_fraction, from_pause_pool=from_pool)
         bd = scale_breakdown(bd, self.state.speed(worker))
         self.phase_log.append(bd)
         c = self.state.admit(fn.name, worker, self.now,
-                             has_snapshot=from_snap)
+                             has_snapshot=tier == WarmthTier.SNAPSHOT_READY)
         if st.snapshot:
             self.state.snapshots.add(fn.name)
+        self._push(self.now + bd.total, "start_done", (c.id, pend, bd))
+
+    def _promote(self, c: Container, pend: Optional[_Pending]):
+        """Resume a demoted resident container (the ladder's promote edge:
+        pay only the phases its tier has not already completed)."""
+        fn = self.trace.functions[c.function]
+        tier = c.tier
+        idle_s = self.now - c.warm_since
+        bd = self.cost_model.promote_breakdown(
+            fn, tier, concurrent_colds=self.state.provisioning_on(c.worker))
+        bd = scale_breakdown(bd, self.state.speed(c.worker))
+        self.phase_log.append(bd)
+        self.policy.on_promote(c, self._ctx(), idle_s, tier)
+        self.state.promote_begin(c, self.now)
         self._push(self.now + bd.total, "start_done", (c.id, pend, bd))
 
     def _on_start_done(self, payload):
@@ -266,19 +288,30 @@ class Simulator:
 
     def _to_idle(self, c: Container):
         self.state.to_idle(c, self.now)
-        ttl = self.policy.ttl_for(c, self._ctx())
-        expiry = self.state.set_expiry(c, self.now + ttl)
-        if expiry != float("inf"):
-            self._push(expiry, "expire", (c.id, expiry))
+        self._arm_edge(c, self.policy.schedule_for(c, self._ctx()))
+
+    def _arm_edge(self, c: Container, sched):
+        """Arm the next demotion-schedule edge (or park forever)."""
+        if not sched:
+            self.state.set_expiry(c, float("inf"))
+            return
+        (dwell, tier), rest = sched[0], tuple(sched[1:])
+        stamp = self.state.set_expiry(c, self.now + dwell)
+        self._push(stamp, "expire", (c.id, stamp, tier, rest))
 
     def _on_expire(self, payload):
-        cid, stamp = payload
-        c = self.state.expiry_valid(cid, stamp)
+        cid, stamp, tier, rest = payload
+        c = self.state.transition_valid(cid, stamp)
         if c is None:
-            return  # dead, busy again, or superseded by a reuse
-        self.policy.on_expire(c, self.now, self.now - c.warm_since)
-        self.state.destroy(c, self.now)
-        self._drain_queue()
+            return  # dead, busy again, or superseded by a reuse/promotion
+        if tier == WarmthTier.DEAD:
+            self.policy.on_expire(c, self.now, self.now - c.warm_since,
+                                  tier=c.tier)
+            self.state.destroy(c, self.now)
+        else:
+            self.state.demote(c, tier, self.now)
+            self._arm_edge(c, rest)
+        self._drain_queue()   # freed footprint may admit queued work
 
     def _on_pool_refill(self, _):
         if self.pause_pool < self.suite.startup.pause_pool_size:
@@ -290,6 +323,12 @@ class Simulator:
             if ctx.warm_idle(fn_name) or fn_name in self._inflight_prewarm:
                 continue
             if ctx.active_count(fn_name):
+                continue
+            # a demoted resident beats a fresh spawn: promote it to warm
+            c = self.state.best_resident(fn_name)
+            if c is not None and self.state.can_promote(c):
+                self._inflight_prewarm.add(fn_name)
+                self._promote(c, None)
                 continue
             fn = self.trace.functions[fn_name]
             worker = find_worker(self.state, fn, self.suite, ctx)
@@ -318,6 +357,11 @@ class Simulator:
             c = self.state.free_slot(fn_name)
             if c is not None:
                 self._begin_exec(c, pend, cold=False)
+                progressed = True
+                continue
+            c = self.state.best_resident(fn_name)
+            if c is not None and self.state.can_promote(c):
+                self._promote(c, pend)
                 progressed = True
                 continue
             # same policy-order eviction as the arrival path: a queued

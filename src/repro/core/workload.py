@@ -33,10 +33,37 @@ class Trace:
 
     def __post_init__(self):
         self.invocations.sort(key=lambda i: i.time)
+        self._times_by_fn: Optional[Dict[str, np.ndarray]] = None
 
     @property
     def rate(self) -> float:
         return len(self.invocations) / self.horizon if self.horizon else 0.0
+
+    # ------------------------------------------------------------------ #
+    # cached per-function time index: one pass over the trace builds every
+    # function's sorted arrival-time array, so per-function queries
+    # (predictor studies, tier-ladder tuning, benchmarks) stop rescanning
+    # the whole invocation list per call
+    # ------------------------------------------------------------------ #
+    def times_for(self, function: str) -> np.ndarray:
+        """Sorted arrival times of ``function`` (cached, built lazily)."""
+        if self._times_by_fn is None:
+            by_fn: Dict[str, List[float]] = {}
+            for inv in self.invocations:       # already time-sorted
+                by_fn.setdefault(inv.function, []).append(inv.time)
+            self._times_by_fn = {fn: np.asarray(ts, dtype=np.float64)
+                                 for fn, ts in by_fn.items()}
+        return self._times_by_fn.get(function, np.array([]))
+
+    def interarrival(self, function: str) -> np.ndarray:
+        """Gaps between successive invocations of ``function``."""
+        times = self.times_for(function)
+        return np.diff(times) if len(times) > 1 else np.array([])
+
+    def counts_by_function(self) -> Dict[str, int]:
+        """Invocation counts per function (from the cached index)."""
+        self.times_for("")            # force the index
+        return {fn: len(ts) for fn, ts in self._times_by_fn.items()}
 
 
 def _mk_functions(n: int, *, package_mb=64.0, memory_mb=1024.0,
@@ -186,5 +213,6 @@ ALL_GENERATORS = {
 
 
 def interarrival_series(trace: Trace, function: str) -> np.ndarray:
-    times = np.array([i.time for i in trace.invocations if i.function == function])
-    return np.diff(times) if len(times) > 1 else np.array([])
+    """Gaps between invocations of ``function`` — served from the trace's
+    cached per-function time index (no full-trace rescan per call)."""
+    return trace.interarrival(function)

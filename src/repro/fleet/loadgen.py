@@ -18,18 +18,17 @@ Run modes (orthogonal to everything else):
 The runner and the simulator are two drivers over the same
 :class:`~repro.core.cluster.ClusterState` kernel — the simulator advances
 it by event heap, this runner by clock — so container semantics
-(scale-to-zero on TTL expiry, pressure evictions in policy order, prewarm
-ticks, chain cascades, per-container concurrency, heterogeneous workers)
-agree by construction; on a virtual-clock replay with the modeled backend
-the two ledgers are *identical*.  Two scoped exceptions: pause pools
-(``Startup.pause_pool_size``) are modeled by the simulator only — the
-fleet has no generic paused-container analogue yet and replays those
-suites as plain cold starts — and under sustained memory pressure the
-queueing disciplines differ (the simulator keeps one global FIFO; the
-fleet per-function queues with no cross-function head-of-line blocking).
-What only a live fleet needs stays here: admission control with SLO
-deadlines, per-function queues, and micro-batching of shape-compatible
-requests.
+(scale-to-zero on TTL expiry, warmth-tier demotion schedules and
+promotions, generic pause pools, pressure evictions in policy order,
+prewarm ticks, chain cascades, per-container concurrency, heterogeneous
+workers) agree by construction; on a virtual-clock replay with the
+modeled backend the two ledgers are *identical*, including suites that
+exercise the PAUSED and SNAPSHOT_READY tiers.  The one scoped exception:
+under sustained memory pressure the queueing disciplines differ (the
+simulator keeps one global FIFO; the fleet per-function queues with no
+cross-function head-of-line blocking).  What only a live fleet needs
+stays here: admission control with SLO deadlines, per-function queues,
+and micro-batching of shape-compatible requests.
 """
 from __future__ import annotations
 
@@ -42,7 +41,7 @@ import numpy as np
 
 from repro.core.cluster import find_worker
 from repro.core.costmodel import CostModel
-from repro.core.lifecycle import Breakdown, Container, Phase
+from repro.core.lifecycle import Breakdown, Container, Phase, WarmthTier
 from repro.core.metrics import QoSLedger
 from repro.core.policies.base import PolicySuite
 from repro.core.workload import Trace
@@ -95,11 +94,15 @@ class FleetRunner:
                                worker_speed=self.cfg.worker_speed,
                                backend=self.backend,
                                slots_per_replica=self.cfg.slots_per_replica,
-                               ledger=self.ledger)
+                               ledger=self.ledger,
+                               tier_footprint_frac=(
+                                   self.cost_model.tier_footprint_frac))
         self.state = self.pool.state
         self.ledger.cluster_capacity_gb = self.state.capacity_gb
-        self.autoscaler = Autoscaler(suite,
-                                     rl_miss_window_s=self.cfg.rl_miss_window_s)
+        self.autoscaler = Autoscaler(
+            suite, rl_miss_window_s=self.cfg.rl_miss_window_s,
+            tier_footprint_frac=self.cost_model.tier_footprint_frac)
+        self.pause_pool: int = 0            # generic paused containers left
         self._events: list = []
         self._seq = itertools.count()
         self._rid = itertools.count()
@@ -134,6 +137,13 @@ class FleetRunner:
                        self._mk_request(inv.function, inv.time, inv.chain, rng))
         if self.autoscaler.tick_interval is not None:
             self._push(0.0, "tick", None)
+        if self.suite.startup.pause_pool_size:
+            # generic PCPM pause pool — same semantics as the simulator
+            self.pause_pool = self.suite.startup.pause_pool_size
+            footprint = (self.suite.startup.pause_pool_size
+                         * self.suite.startup.pause_pool_mb)
+            for w in range(self.cfg.num_workers):
+                self.state.reserve(w, footprint / self.cfg.num_workers)
 
         while self._events:
             t, _, kind, payload = heapq.heappop(self._events)
@@ -145,6 +155,10 @@ class FleetRunner:
 
         # close out idle accounting at horizon
         self.state.close_out(self.trace.horizon)
+        if self.suite.startup.pause_pool_size:
+            self.ledger.add_idle(
+                self.trace.horizon * self.suite.startup.pause_pool_size,
+                self.suite.startup.pause_pool_mb / 1024.0, tier="paused")
         self.ledger.dropped = self.frontend.drops.total
         return self.ledger
 
@@ -161,6 +175,12 @@ class FleetRunner:
         for fn_name in self.autoscaler.prewarm_targets(self.now, ctx):
             if (ctx.warm_idle(fn_name) or fn_name in self._inflight_prewarm
                     or ctx.active_count(fn_name)):
+                continue
+            # a demoted resident beats a fresh spawn: promote it to warm
+            c = self.state.best_resident(fn_name)
+            if c is not None and self.state.can_promote(c):
+                self._inflight_prewarm.add(fn_name)
+                self._promote(c, [])
                 continue
             worker = find_worker(self.state, self.pool.functions[fn_name],
                                  self.suite, ctx)
@@ -206,13 +226,22 @@ class FleetRunner:
         self._drain_all()
 
     def _on_expire(self, payload):
-        cid, stamp = payload
-        c = self.state.expiry_valid(cid, stamp)
+        cid, stamp, tier, rest = payload
+        c = self.state.transition_valid(cid, stamp)
         if c is None:
-            return  # dead, busy again, or superseded by a reuse
-        self.autoscaler.on_expire(c, self.now, self.now - c.warm_since)
-        self.state.destroy(c, self.now)
-        self._drain_all()
+            return  # dead, busy again, or superseded by a reuse/promotion
+        if tier == WarmthTier.DEAD:
+            self.autoscaler.on_expire(c, self.now, self.now - c.warm_since,
+                                      tier=c.tier)
+            self.state.destroy(c, self.now)
+        else:
+            self.state.demote(c, tier, self.now)
+            self._arm_edge(c, rest)
+        self._drain_all()   # freed footprint may admit queued work
+
+    def _on_pool_refill(self, _):
+        if self.pause_pool < self.suite.startup.pause_pool_size:
+            self.pause_pool += 1
 
     # ------------------------------------------------------------------ #
     # dispatch machinery
@@ -237,6 +266,15 @@ class FleetRunner:
                 return False
             self._begin_exec(replica, batch, cold=False, bd=None)
             return True
+        # warmth ladder: resume a demoted resident replica (paused /
+        # snapshot-resident) — far cheaper than a fresh cold start
+        c = self.state.best_resident(fn_name)
+        if c is not None and self.state.can_promote(c):
+            batch = self._take_batch(fn_name)
+            if not batch:
+                return False
+            self._promote(c, batch)
+            return True
         # cold path
         self.autoscaler.on_miss(fn_name, self.now)
         worker = find_worker(self.state, self.pool.functions[fn_name],
@@ -254,12 +292,27 @@ class FleetRunner:
 
     def _launch(self, fn_name: str, worker: int, batch: List[Request]):
         st = self.suite.startup
-        from_snap = st.snapshot and fn_name in self.state.snapshots
+        from_pool = self.pause_pool > 0 and st.pause_pool_size > 0
+        if from_pool:
+            self.pause_pool -= 1
+            refill = self.cost_model.breakdown(
+                self.pool.functions[fn_name]).drop(
+                Phase.DEPS_LOAD, Phase.CODE_INIT).total
+            self._push(self.now + refill, "pool_refill", None)
+        tier = self.state.spawn_tier(fn_name, img_cache=st.img_cache)
         replica, bd = self.pool.start_replica(
-            fn_name, worker, self.now, from_snapshot=from_snap,
-            deps_fraction=st.deps_fraction if not from_snap else 1.0)
+            fn_name, worker, self.now, tier=tier,
+            deps_fraction=st.deps_fraction, from_pause_pool=from_pool)
         if st.snapshot:
             self.state.snapshots.add(fn_name)
+        self._push(self.now + bd.total, "start_done", (replica.id, batch, bd))
+
+    def _promote(self, c: Container, batch: List[Request]):
+        """Resume a demoted resident replica (the ladder's promote edge)."""
+        replica = self.pool.replica_for(c)
+        idle_s = self.now - c.warm_since
+        self.autoscaler.on_promote(c, self._ctx(), idle_s, c.tier)
+        bd = self.pool.promote_replica(replica, self.now)
         self._push(self.now + bd.total, "start_done", (replica.id, batch, bd))
 
     def _reuse(self, replica, batch: List[Request]):
@@ -289,10 +342,16 @@ class FleetRunner:
 
     def _to_idle(self, c: Container):
         self.state.to_idle(c, self.now)
-        ttl = self.autoscaler.ttl_for(c, self._ctx())
-        expiry = self.state.set_expiry(c, self.now + ttl)
-        if expiry != float("inf"):
-            self._push(expiry, "expire", (c.id, expiry))
+        self._arm_edge(c, self.autoscaler.schedule_for(c, self._ctx()))
+
+    def _arm_edge(self, c: Container, sched):
+        """Arm the next demotion-schedule edge (or park forever)."""
+        if not sched:
+            self.state.set_expiry(c, float("inf"))
+            return
+        (dwell, tier), rest = sched[0], tuple(sched[1:])
+        stamp = self.state.set_expiry(c, self.now + dwell)
+        self._push(stamp, "expire", (c.id, stamp, tier, rest))
 
     def _drain_all(self):
         progressed = True

@@ -36,7 +36,7 @@ import numpy as np
 from repro.core.cluster import ClusterState, scale_breakdown
 from repro.core.costmodel import CostModel
 from repro.core.lifecycle import (Breakdown, Container, ContainerState,
-                                  FunctionSpec)
+                                  FunctionSpec, WarmthTier)
 from repro.core.metrics import QoSLedger
 from repro.fleet.frontend import Request
 
@@ -78,12 +78,29 @@ class Replica:
 
 
 class ExecutionBackend:
-    """Where a replica's startup and execution durations come from."""
+    """Where a replica's startup and execution durations come from.
 
-    def provision(self, replica: Replica, *, from_snapshot: bool,
+    The warmth-tier ladder maps onto the backend as three hooks:
+    ``provision`` (spawn from a function-level tier: DEAD / IMG_CACHED /
+    SNAPSHOT_READY), ``promote`` (resume a *resident* demoted replica:
+    PAUSED thaw or snapshot restore), and ``demote`` (slide down a rung:
+    keep the engine for PAUSED, persist + drop it for SNAPSHOT_READY).
+    """
+
+    def provision(self, replica: Replica, *, tier: WarmthTier,
                   concurrent_colds: int, deps_fraction: float,
+                  from_pause_pool: bool = False,
                   speed: float = 1.0) -> Breakdown:
         raise NotImplementedError
+
+    def promote(self, replica: Replica, tier: WarmthTier, *,
+                concurrent_colds: int = 0, speed: float = 1.0) -> Breakdown:
+        """Seconds to resume a resident replica from ``tier``."""
+        raise NotImplementedError
+
+    def demote(self, replica: Replica, tier: WarmthTier) -> None:
+        """Apply a ladder demotion to the execution substrate (no-op for
+        modeled replicas)."""
 
     def execute(self, replica: Replica, requests: Sequence[Request], *,
                 first_run_penalty: float = 0.0,
@@ -109,12 +126,19 @@ class ModeledBackend(ExecutionBackend):
         self.cost_model = cost_model or CostModel()
         self.batch_alpha = batch_alpha
 
-    def provision(self, replica: Replica, *, from_snapshot: bool,
+    def provision(self, replica: Replica, *, tier: WarmthTier,
                   concurrent_colds: int, deps_fraction: float,
+                  from_pause_pool: bool = False,
                   speed: float = 1.0) -> Breakdown:
-        bd = self.cost_model.breakdown(
-            replica.spec, concurrent_colds=concurrent_colds,
-            from_snapshot=from_snapshot, deps_fraction=deps_fraction)
+        bd = self.cost_model.promote_breakdown(
+            replica.spec, tier, concurrent_colds=concurrent_colds,
+            deps_fraction=deps_fraction, from_pause_pool=from_pause_pool)
+        return scale_breakdown(bd, speed)
+
+    def promote(self, replica: Replica, tier: WarmthTier, *,
+                concurrent_colds: int = 0, speed: float = 1.0) -> Breakdown:
+        bd = self.cost_model.promote_breakdown(
+            replica.spec, tier, concurrent_colds=concurrent_colds)
         return scale_breakdown(bd, speed)
 
     def execute(self, replica: Replica, requests: Sequence[Request], *,
@@ -138,7 +162,20 @@ class EngineProfile:
 
 class EngineBackend(ExecutionBackend):
     """Real JAX engines; durations are measured, not modeled (``speed`` is
-    therefore ignored — a real worker is as fast as it is)."""
+    therefore ignored — a real worker is as fast as it is).
+
+    The warmth tiers map onto real mechanisms:
+
+      WARM_IDLE / PAUSED   the engine object stays resident — params on
+                           device, compiled executables live; promote is a
+                           measured no-op (cgroup thaw has no JAX analogue)
+      SNAPSHOT_READY       params persisted to the SnapshotStore and the
+                           engine dropped on demote; promote is a genuine
+                           ``cold_start(from_snapshot=True)`` — snapshot
+                           deserialization + device_put + compiled-
+                           executable cache hit
+      IMG_CACHED / DEAD    full measured cold start (XLA compile et al.)
+    """
 
     def __init__(self, store=None, profiles: Optional[Dict[str, EngineProfile]] = None):
         self.store = store
@@ -150,9 +187,8 @@ class EngineBackend(ExecutionBackend):
             raise KeyError(f"no EngineProfile registered for {function!r}")
         return prof
 
-    def provision(self, replica: Replica, *, from_snapshot: bool,
-                  concurrent_colds: int, deps_fraction: float,
-                  speed: float = 1.0) -> Breakdown:
+    def _spawn_engine(self, replica: Replica, *,
+                      from_snapshot: bool) -> Breakdown:
         from repro.serving.engine import InferenceEngine
         prof = self.profile(replica.function)
         engine = InferenceEngine(prof.arch, smoke=prof.smoke,
@@ -160,6 +196,29 @@ class EngineBackend(ExecutionBackend):
                                  store=self.store)
         replica.engine = engine
         return engine.cold_start(from_snapshot=from_snapshot)
+
+    def provision(self, replica: Replica, *, tier: WarmthTier,
+                  concurrent_colds: int, deps_fraction: float,
+                  from_pause_pool: bool = False,
+                  speed: float = 1.0) -> Breakdown:
+        return self._spawn_engine(
+            replica, from_snapshot=tier == WarmthTier.SNAPSHOT_READY)
+
+    def promote(self, replica: Replica, tier: WarmthTier, *,
+                concurrent_colds: int = 0, speed: float = 1.0) -> Breakdown:
+        if replica.engine is not None and replica.engine.warm:
+            # PAUSED: everything resident — measured resume is free
+            return Breakdown({})
+        return self._spawn_engine(replica, from_snapshot=True)
+
+    def demote(self, replica: Replica, tier: WarmthTier) -> None:
+        if tier == WarmthTier.PAUSED:
+            return                    # engine stays resident, just frozen
+        if replica.engine is not None:
+            # SNAPSHOT_READY: the param snapshot + executable cache were
+            # written at first cold start; drop the live engine
+            replica.engine.shutdown()
+            replica.engine = None
 
     def execute(self, replica: Replica, requests: Sequence[Request], *,
                 first_run_penalty: float = 0.0,
@@ -216,13 +275,15 @@ class EnginePool:
                  worker_speed: Union[float, Sequence[float]] = 1.0,
                  backend: Optional[ExecutionBackend] = None,
                  slots_per_replica: int = 1,
-                 ledger: Optional[QoSLedger] = None):
+                 ledger: Optional[QoSLedger] = None,
+                 tier_footprint_frac: Optional[Dict] = None):
         self.backend = backend or ModeledBackend()
         self.state = ClusterState(
             functions, num_workers=num_workers,
             worker_memory_mb=worker_memory_mb, worker_speed=worker_speed,
             ledger=ledger, default_concurrency=slots_per_replica,
-            on_destroy=self._teardown)
+            on_destroy=self._teardown, on_demote=self._demote_replica,
+            tier_footprint_frac=tier_footprint_frac)
         self.replicas: Dict[int, Replica] = {}
         self.phase_log: List[Breakdown] = []
 
@@ -230,6 +291,12 @@ class EnginePool:
         replica = self.replicas.pop(container.id, None)
         if replica is not None:
             self.backend.release(replica)
+
+    def _demote_replica(self, container: Container,
+                        tier: WarmthTier) -> None:
+        replica = self.replicas.get(container.id)
+        if replica is not None:
+            self.backend.demote(replica, tier)
 
     # -- kernel views (the policy vocabulary) ----------------------------- #
     @property
@@ -277,19 +344,40 @@ class EnginePool:
 
     # -- lifecycle ------------------------------------------------------- #
     def start_replica(self, function: str, worker: int, now: float, *,
+                      tier: Optional[WarmthTier] = None,
                       from_snapshot: bool = False,
-                      deps_fraction: float = 1.0) -> Tuple[Replica, Breakdown]:
+                      deps_fraction: float = 1.0,
+                      from_pause_pool: bool = False) -> Tuple[Replica, Breakdown]:
+        """Spawn a new replica from a function-level warmth tier (DEAD /
+        IMG_CACHED / SNAPSHOT_READY).  ``from_snapshot`` is the legacy
+        boolean spelling of ``tier=SNAPSHOT_READY``."""
+        if tier is None:
+            tier = (WarmthTier.SNAPSHOT_READY if from_snapshot
+                    else WarmthTier.DEAD)
         c = self.state.admit(function, worker, now,
-                             has_snapshot=from_snapshot)
+                             has_snapshot=tier == WarmthTier.SNAPSHOT_READY)
         replica = Replica(container=c, spec=self.state.functions[function])
         self.replicas[c.id] = replica
         bd = self.backend.provision(
-            replica, from_snapshot=from_snapshot,
+            replica, tier=tier,
             concurrent_colds=self.state.provisioning_on(worker) - 1,
-            deps_fraction=deps_fraction,
+            deps_fraction=deps_fraction, from_pause_pool=from_pause_pool,
             speed=self.state.speed(worker))
         self.phase_log.append(bd)
         return replica, bd
+
+    def promote_replica(self, replica: Replica, now: float) -> Breakdown:
+        """Resume a demoted resident replica via the kernel's promote path
+        (bills the tier dwell, re-inflates the footprint) and the
+        backend's tier→mechanism mapping."""
+        c = replica.container
+        worker = c.worker
+        concurrent = self.state.provisioning_on(worker)
+        tier = self.state.promote_begin(c, now)
+        bd = self.backend.promote(replica, tier, concurrent_colds=concurrent,
+                                  speed=self.state.speed(worker))
+        self.phase_log.append(bd)
+        return bd
 
     def release(self, replica: Replica) -> None:
         """Destroy a replica (idle accounting + memory + engine teardown all

@@ -1,0 +1,143 @@
+"""CostModel unit tests: calibration-file loading (missing-key defaults,
+``runtime_init_s`` merge), the platform-profile presets, and the
+warmth-tier footprint / transition-cost matrix."""
+import json
+
+import pytest
+
+from repro.core.costmodel import (PLATFORM_PROFILES, RUNTIME_INIT_S,
+                                  TIER_FOOTPRINT_FRAC, CostModel,
+                                  platform_cost_model, platform_keep_alive)
+from repro.core.lifecycle import (Breakdown, FunctionSpec, Phase, WarmthTier)
+
+FN = FunctionSpec(name="f", package_mb=64.0, memory_mb=1024.0)
+
+
+# --------------------------------------------------------------------------- #
+# from_calibration
+# --------------------------------------------------------------------------- #
+
+
+def _write(tmp_path, data):
+    p = tmp_path / "calibration.json"
+    p.write_text(json.dumps(data))
+    return str(p)
+
+
+def test_from_calibration_empty_file_keeps_every_default(tmp_path):
+    cm = CostModel.from_calibration(_write(tmp_path, {}))
+    assert cm == CostModel()
+
+
+def test_from_calibration_overrides_present_scalars_only(tmp_path):
+    cm = CostModel.from_calibration(_write(tmp_path, {
+        "compile_base_s": 2.5, "load_bandwidth_gbps": 0.8}))
+    default = CostModel()
+    assert cm.compile_base_s == 2.5
+    assert cm.load_bandwidth_gbps == 0.8
+    # untouched keys keep defaults
+    assert cm.snapshot_restore_frac == default.snapshot_restore_frac
+    assert cm.provision_base_s == default.provision_base_s
+    assert cm.runtime_init_s == default.runtime_init_s
+
+
+def test_from_calibration_ignores_unknown_keys(tmp_path):
+    cm = CostModel.from_calibration(_write(tmp_path, {
+        "not_a_field": 1.0, "provision_base_s": 0.2}))
+    assert cm.provision_base_s == 0.2
+    assert not hasattr(cm, "not_a_field")
+
+
+def test_from_calibration_runtime_init_merge_keeps_unlisted_runtimes(tmp_path):
+    cm = CostModel.from_calibration(_write(tmp_path, {
+        "runtime_init_s": {"python-jit": 0.11, "rust": 0.02}}))
+    assert cm.runtime_init_s["python-jit"] == 0.11     # overridden
+    assert cm.runtime_init_s["rust"] == 0.02           # added
+    for k, v in RUNTIME_INIT_S.items():                # rest untouched
+        if k != "python-jit":
+            assert cm.runtime_init_s[k] == v
+
+
+def test_from_calibration_missing_file_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        CostModel.from_calibration(str(tmp_path / "nope.json"))
+
+
+# --------------------------------------------------------------------------- #
+# platform profiles
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("platform", sorted(PLATFORM_PROFILES))
+def test_platform_cost_model_builds_and_prices_a_cold_start(platform):
+    cm = platform_cost_model(platform)
+    prof = PLATFORM_PROFILES[platform]
+    assert cm.provision_base_s == prof["provision_base_s"]
+    assert cm.load_bandwidth_gbps == prof["load_bandwidth_gbps"]
+    assert cm.runtime_init_s == prof["runtime_init_s"]
+    # keep_alive_default_s is a platform policy knob, not a CostModel field
+    assert not hasattr(cm, "keep_alive_default_s")
+    bd = cm.breakdown(FN)
+    assert bd.total > 0
+    assert set(bd.seconds) == {Phase.PROVISION, Phase.RUNTIME_INIT,
+                               Phase.DEPS_LOAD, Phase.CODE_INIT}
+
+
+@pytest.mark.parametrize("platform", sorted(PLATFORM_PROFILES))
+def test_platform_keep_alive_matches_profile(platform):
+    tau = platform_keep_alive(platform)
+    assert tau == PLATFORM_PROFILES[platform]["keep_alive_default_s"]
+    assert tau > 0
+
+
+def test_platform_relative_ordering_matches_survey():
+    """The survey's RQ4 magnitudes: AWS colder-starts fastest, Azure
+    slowest; Azure retains containers longest."""
+    totals = {p: platform_cost_model(p).breakdown(FN).total
+              for p in PLATFORM_PROFILES}
+    assert totals["aws_lambda"] < totals["azure"]
+    assert platform_keep_alive("azure") > platform_keep_alive("aws_lambda")
+
+
+# --------------------------------------------------------------------------- #
+# warmth-tier matrix
+# --------------------------------------------------------------------------- #
+
+
+def test_tier_footprints_descend_down_the_ladder():
+    cm = CostModel()
+    mbs = [cm.tier_footprint_mb(FN, t)
+           for t in (WarmthTier.WARM_IDLE, WarmthTier.PAUSED,
+                     WarmthTier.SNAPSHOT_READY, WarmthTier.IMG_CACHED)]
+    assert mbs[0] == FN.memory_mb
+    assert mbs == sorted(mbs, reverse=True)
+    assert mbs[-1] == 0.0
+    assert cm.tier_footprint_frac == TIER_FOOTPRINT_FRAC
+
+
+def test_promote_costs_rise_as_tiers_cool():
+    cm = CostModel()
+    costs = [cm.promote_breakdown(FN, t).total
+             for t in (WarmthTier.WARM_IDLE, WarmthTier.PAUSED,
+                       WarmthTier.SNAPSHOT_READY, WarmthTier.IMG_CACHED,
+                       WarmthTier.DEAD)]
+    assert costs[0] == 0.0
+    assert costs == sorted(costs)
+    assert costs[1] == cm.resume_paused_s
+    # matrix rows agree with the legacy boolean call sites
+    assert cm.promote_breakdown(FN, WarmthTier.SNAPSHOT_READY).seconds == \
+        cm.breakdown(FN, from_snapshot=True).seconds
+    assert cm.promote_breakdown(FN, WarmthTier.DEAD).seconds == \
+        cm.breakdown(FN).seconds
+
+
+def test_demote_costs_free_except_snapshot_write():
+    cm = CostModel()
+    assert cm.demote_cost_s(WarmthTier.WARM_IDLE, WarmthTier.PAUSED) == 0.0
+    assert cm.demote_cost_s(WarmthTier.PAUSED,
+                            WarmthTier.SNAPSHOT_READY) == cm.snapshot_write_s
+    assert cm.demote_cost_s(WarmthTier.PAUSED, WarmthTier.DEAD) == 0.0
+    m = cm.transition_matrix(FN)
+    assert m[(WarmthTier.PAUSED, WarmthTier.WARM_IDLE)] == cm.resume_paused_s
+    assert m[(WarmthTier.DEAD, WarmthTier.WARM_IDLE)] == \
+        cm.breakdown(FN).total

@@ -1,0 +1,417 @@
+"""Warmth-tier ladder tests: kernel demote/promote semantics, per-tier
+billing, demotion schedules through both drivers, sim-vs-fleet ledger
+identity with PAUSED and SNAPSHOT_READY engaged, the O(log W) placement
+index, and the graded-vs-binary Pareto gate."""
+import math
+
+import pytest
+
+from repro.core.cluster import ClusterContext, ClusterState, PolicyDriver
+from repro.core.costmodel import CostModel
+from repro.core.lifecycle import (ContainerState, FunctionSpec, WarmthTier)
+from repro.core.policies import suite
+from repro.core.policies.base import Startup
+from repro.core.policies.keepalive import FixedTTL
+from repro.core.policies.lifetime import (FixedLadder, KeepAliveLadder,
+                                          PredictiveLadder)
+from repro.core.simulator import SimConfig, Simulator, simulate
+from repro.core.workload import azure_like, poisson, rare
+from repro.fleet import FleetConfig, replay
+
+CM = CostModel()
+
+
+def _fns(n=2, **kw):
+    return {f"fn{i}": FunctionSpec(name=f"fn{i}", package_mb=64.0,
+                                   memory_mb=1024.0, **kw)
+            for i in range(n)}
+
+
+def _identical(sim_s, fleet_s):
+    assert set(sim_s) == set(fleet_s)
+    for k in sim_s:
+        a, b = sim_s[k], fleet_s[k]
+        if isinstance(a, float) and math.isnan(a):
+            assert math.isnan(b), k
+        else:
+            assert a == b, (k, a, b)
+
+
+# --------------------------------------------------------------------------- #
+# kernel: demote / promote semantics + per-tier billing
+# --------------------------------------------------------------------------- #
+
+
+def test_demote_shrinks_footprint_and_bills_prior_tier():
+    st = ClusterState(_fns(1), num_workers=1, worker_memory_mb=4096.0)
+    c = st.admit("fn0", 0, 0.0)
+    st.acquire(c, 0.0)
+    st.release_slot(c, 1.0)
+    st.to_idle(c, 1.0)
+    assert st.used_mb() == 1024.0
+
+    st.demote(c, WarmthTier.PAUSED, 11.0)      # 10 s warm-idle billed full
+    assert c.state == ContainerState.PAUSED
+    assert c.resident_mb == 1024.0 * 0.125
+    assert st.used_mb() == pytest.approx(128.0)
+    assert st.ledger.idle_gb_s == pytest.approx(10.0 * 1.0)
+    assert st.ledger.idle_gb_s_by_tier == {"warm_idle": pytest.approx(10.0)}
+    assert st.warm_idle("fn0") == [] and st.warm_idle_mb() == 0.0
+    assert st.best_resident("fn0") is c
+
+    st.demote(c, WarmthTier.SNAPSHOT_READY, 31.0)   # 20 s paused at 12.5%
+    assert c.state == ContainerState.SNAPSHOT_READY
+    assert c.resident_mb == pytest.approx(1024.0 * 0.02)
+    assert st.ledger.idle_gb_s_by_tier["paused"] == \
+        pytest.approx(20.0 * 0.125)
+    assert "fn0" in st.snapshots          # the write IS the snapshot
+    assert st.ledger.demotions == 2
+    st.check_counters()
+
+    st.destroy(c, 41.0)                   # 10 s snapshot residue at 2%
+    assert st.ledger.idle_gb_s_by_tier["snapshot_ready"] == \
+        pytest.approx(10.0 * 0.02)
+    assert st.used_mb() == pytest.approx(0.0, abs=1e-9)
+    st.check_counters()
+
+
+def test_promote_begin_reinflates_and_counts():
+    st = ClusterState(_fns(1), num_workers=1, worker_memory_mb=4096.0)
+    c = st.admit("fn0", 0, 0.0)
+    st.acquire(c, 0.0)
+    st.release_slot(c, 1.0)
+    st.to_idle(c, 1.0)
+    st.demote(c, WarmthTier.PAUSED, 2.0)
+    assert st.can_promote(c)
+    tier = st.promote_begin(c, 5.0)
+    assert tier == WarmthTier.PAUSED
+    assert c.state == ContainerState.PROVISIONING
+    assert c.resident_mb == 1024.0
+    assert st.used_mb() == 1024.0
+    assert st.ledger.promotions == 1
+    assert st.ledger.idle_gb_s_by_tier["paused"] == \
+        pytest.approx(3.0 * 0.125)
+    assert st.provisioning_on(0) == 1 and st.active_count("fn0") == 1
+    st.check_counters()
+
+
+def test_can_promote_respects_worker_capacity():
+    st = ClusterState(_fns(2), num_workers=1, worker_memory_mb=1200.0)
+    c = st.admit("fn0", 0, 0.0)
+    st.acquire(c, 0.0)
+    st.release_slot(c, 1.0)
+    st.to_idle(c, 1.0)
+    st.demote(c, WarmthTier.PAUSED, 2.0)      # frees 896 MB
+    st.reserve(0, 1000.0)                     # someone else took the room
+    assert not st.can_promote(c)
+
+
+def test_best_resident_prefers_paused_over_snapshot():
+    st = ClusterState(_fns(1), num_workers=1, worker_memory_mb=8192.0)
+    a = st.admit("fn0", 0, 0.0)
+    b = st.admit("fn0", 0, 0.0)
+    for c in (a, b):
+        st.acquire(c, 0.0)
+        st.release_slot(c, 1.0)
+        st.to_idle(c, 1.0)
+    st.demote(a, WarmthTier.SNAPSHOT_READY, 2.0)
+    st.demote(b, WarmthTier.PAUSED, 2.0)
+    assert st.best_resident("fn0") is b
+    st.promote_begin(b, 3.0)
+    assert st.best_resident("fn0") is a
+
+
+def test_transition_valid_superseded_by_promotion():
+    st = ClusterState(_fns(1), num_workers=1)
+    c = st.admit("fn0", 0, 0.0)
+    st.acquire(c, 0.0)
+    st.release_slot(c, 1.0)
+    st.to_idle(c, 1.0)
+    st.demote(c, WarmthTier.PAUSED, 2.0)
+    stamp = st.set_expiry(c, 10.0)
+    assert st.transition_valid(c.id, stamp) is c
+    assert st.expiry_valid(c.id, stamp) is None     # warm-only alias
+    st.promote_begin(c, 3.0)
+    assert st.transition_valid(c.id, stamp) is None
+
+
+def test_spawn_tier_classification():
+    st = ClusterState(_fns(2), num_workers=1)
+    assert st.spawn_tier("fn0") == WarmthTier.DEAD
+    st.admit("fn0", 0, 0.0)                   # image now pulled
+    assert st.spawn_tier("fn0") == WarmthTier.DEAD
+    assert st.spawn_tier("fn0", img_cache=True) == WarmthTier.IMG_CACHED
+    st.snapshots.add("fn0")
+    assert st.spawn_tier("fn0") == WarmthTier.SNAPSHOT_READY
+    assert st.spawn_tier("fn1", img_cache=True) == WarmthTier.DEAD
+
+
+# --------------------------------------------------------------------------- #
+# schedules: KeepAlive as the one-edge special case; driver normalisation
+# --------------------------------------------------------------------------- #
+
+
+def test_keepalive_without_lifetime_is_single_dead_edge():
+    st = ClusterState(_fns(1), num_workers=1)
+    c = st.admit("fn0", 0, 0.0)
+    ctx = ClusterContext(st, CM)
+    drv = PolicyDriver(suite("provider_default"))
+    assert drv.schedule_for(c, ctx) == [(600.0, WarmthTier.DEAD)]
+    drv_inf = PolicyDriver(suite("faascache"))
+    assert drv_inf.schedule_for(c, ctx) == []
+
+
+def test_keepalive_ladder_wraps_ttl():
+    st = ClusterState(_fns(1), num_workers=1)
+    c = st.admit("fn0", 0, 0.0)
+    ctx = ClusterContext(st, CM)
+    lad = KeepAliveLadder(FixedTTL(42.0))
+    assert lad.schedule(c, ctx) == [(42.0, WarmthTier.DEAD)]
+
+
+def test_schedule_normalisation_drops_non_descending_edges():
+    st = ClusterState(_fns(1), num_workers=1)
+    c = st.admit("fn0", 0, 0.0)
+    ctx = ClusterContext(st, CM)
+
+    class Weird(FixedLadder):
+        def schedule(self, container, ctx):
+            return [(5.0, WarmthTier.PAUSED),
+                    (1.0, WarmthTier.WARM_IDLE),       # illegal: upward
+                    (2.0, WarmthTier.PAUSED),          # illegal: repeat
+                    (3.0, WarmthTier.DEAD),
+                    (9.0, WarmthTier.SNAPSHOT_READY)]  # after DEAD
+
+    s = suite("provider_default")
+    s.lifetime = Weird()
+    drv = PolicyDriver(s)
+    assert drv.schedule_for(c, ctx) == [(5.0, WarmthTier.PAUSED),
+                                        (3.0, WarmthTier.DEAD)]
+
+
+def test_schedule_clamps_spawn_only_tiers_and_charges_snapshot_write():
+    st = ClusterState(_fns(1), num_workers=1)
+    c = st.admit("fn0", 0, 0.0)
+    ctx = ClusterContext(st, CM)
+
+    class ImgCachedLadder(FixedLadder):
+        def schedule(self, container, ctx):
+            return [(5.0, WarmthTier.PAUSED),
+                    (7.0, WarmthTier.SNAPSHOT_READY),
+                    (9.0, WarmthTier.IMG_CACHED)]     # spawn-only tier
+
+    s = suite("provider_default")
+    s.lifetime = ImgCachedLadder()
+    sched = PolicyDriver(s).schedule_for(c, ctx)
+    # IMG_CACHED is not a resident rung -> clamped to DEAD; the
+    # PAUSED->SNAPSHOT_READY edge carries the snapshot-write cost as
+    # extra dwell in the pre-demotion tier
+    assert sched == [(5.0, WarmthTier.PAUSED),
+                     (7.0 + CM.snapshot_write_s, WarmthTier.SNAPSHOT_READY),
+                     (9.0, WarmthTier.DEAD)]
+    # and the kernel refuses a spawn-only demote outright
+    st.acquire(c, 0.0)
+    st.release_slot(c, 1.0)
+    st.to_idle(c, 1.0)
+    with pytest.raises(AssertionError):
+        st.demote(c, WarmthTier.IMG_CACHED, 2.0)
+
+
+def test_rl_feedback_tracks_configured_footprints():
+    cm = CostModel(tier_footprint_frac={**CM.tier_footprint_frac,
+                                        WarmthTier.PAUSED: 0.5})
+    tr = poisson(rate=0.5, horizon=60.0, num_functions=2, seed=0)
+    sim = Simulator(tr, suite("tiered_rl"), cost_model=cm)
+    assert sim.policy.tier_footprint_frac[WarmthTier.PAUSED] == 0.5
+    st = ClusterState(_fns(1), num_workers=1)
+    c = st.admit("fn0", 0, 0.0)
+    sim.policy.on_expire(c, 100.0, 80.0, tier=WarmthTier.PAUSED)
+    (_, _, weighted), = sim.policy._rl_tombstones["fn0"]
+    assert weighted == pytest.approx(80.0 * 0.5)   # not the default 0.125
+
+
+def test_predictive_ladder_picks_cheap_tier_for_slow_functions():
+    lt = PredictiveLadder(latency_budget_s=0.20, max_warm_s=60.0)
+    for t in range(0, 1200, 150):             # regular 150 s gaps
+        lt.observe("fn0", float(t))
+    st = ClusterState(_fns(1), num_workers=1)
+    c = st.admit("fn0", 0, 0.0)
+    ctx = ClusterContext(st, CM)
+    edges = lt.schedule(c, ctx)
+    # gap_lo ~150 > max_warm -> demote almost immediately, park PAUSED
+    assert edges[0][1] == WarmthTier.PAUSED
+    assert edges[0][0] == lt.min_warm_s
+    assert edges[-1][1] == WarmthTier.DEAD
+
+
+# --------------------------------------------------------------------------- #
+# drivers: the ladder through the simulator
+# --------------------------------------------------------------------------- #
+
+
+def test_simulator_walks_the_ladder_and_promotes():
+    tr = rare(inter_arrival=100.0, horizon=1000.0, jitter=0.05,
+              num_functions=1, seed=3)
+    sim = Simulator(tr, suite("tiered_fixed"),
+                    cfg=SimConfig(num_workers=1))
+    led = sim.run()
+    s = led.summary()
+    assert s["demotions"] > 0
+    assert s["promotions"] > 0
+    assert s["idle_gb_s_paused"] > 0
+    # promotions are cold-ish records whose startup is the tiny thaw cost
+    resumes = [r for r in led.records
+               if r.cold and r.startup.total <= CM.resume_paused_s + 1e-9]
+    assert len(resumes) == s["promotions"]
+    sim.state.check_counters()
+
+
+def test_ladder_reaches_snapshot_tier_and_future_spawns_restore():
+    """After the ladder writes a snapshot, even a post-death spawn pays
+    the restore cost, not the full cold start."""
+    fns = _fns(1)
+    tr = rare(inter_arrival=700.0, horizon=2800.0, jitter=0.0,
+              num_functions=1, seed=1)
+    lad = suite("tiered_fixed",
+                lifetime=FixedLadder(warm_s=10.0, paused_s=50.0,
+                                     snapshot_s=200.0))
+    led = simulate(tr, lad)
+    full = CM.breakdown(fns["fn0"]).total
+    restore = CM.promote_breakdown(fns["fn0"],
+                                   WarmthTier.SNAPSHOT_READY).total
+    colds = sorted(r.startup.total for r in led.records if r.cold)
+    assert colds[-1] == pytest.approx(full)          # the very first start
+    # every later cold start is a restore or cheaper (thaw), never full
+    assert all(c <= restore + 1e-9 for c in colds[:-1])
+    assert led.summary()["idle_gb_s_snapshot"] > 0
+
+
+def test_img_cache_discounts_repeat_spawns():
+    tr = rare(inter_arrival=200.0, horizon=1000.0, jitter=0.0,
+              num_functions=1, seed=2)
+    base = suite("provider_short")              # TTL 60 < gap: all cold
+    cached = suite("provider_short", startup=Startup(img_cache=True))
+    lb = simulate(tr, base)
+    lc = simulate(tr, cached)
+    colds_b = sorted(r.startup.total for r in lb.records if r.cold)
+    colds_c = sorted(r.startup.total for r in lc.records if r.cold)
+    assert colds_c[0] < colds_b[0]              # repeats skip the pull
+    assert colds_c[-1] == colds_b[-1]           # first-ever start identical
+
+
+def test_rl_tombstones_weighted_by_tier():
+    drv = PolicyDriver(suite("tiered_rl"))
+    st = ClusterState(_fns(1), num_workers=1)
+    c = st.admit("fn0", 0, 0.0)
+    drv.on_expire(c, 100.0, 80.0, tier=WarmthTier.PAUSED)
+    (_, _, weighted), = drv._rl_tombstones["fn0"]
+    assert weighted == pytest.approx(80.0 * 0.125)
+
+
+# --------------------------------------------------------------------------- #
+# acceptance: sim-vs-fleet ledger identity with the ladder engaged
+# --------------------------------------------------------------------------- #
+
+TIERED_POLICIES = ["tiered_fixed", "tiered_spes", "tiered_rl", "pause_pool"]
+
+
+@pytest.mark.parametrize("policy", TIERED_POLICIES)
+def test_sim_fleet_ledgers_identical_with_tiers(policy):
+    tr = azure_like(300.0, num_functions=12, seed=7)
+    cfg = dict(num_workers=2, worker_memory_mb=8192.0)
+    sim_led = simulate(tr, suite(policy), cfg=SimConfig(**cfg))
+    fleet_led = replay(tr, suite(policy), cfg=FleetConfig(**cfg))
+    sim_s, fleet_s = sim_led.summary(), fleet_led.summary()
+    if policy.startswith("tiered"):
+        assert sim_s["demotions"] > 0, "ladder never engaged"
+        assert sim_s["idle_gb_s_paused"] > 0
+    _identical(sim_s, fleet_s)
+
+
+def test_sim_fleet_identical_with_tiers_and_heterogeneous_workers():
+    tr = poisson(rate=0.6, horizon=400.0, num_functions=6, seed=5)
+    cfg = dict(num_workers=3, worker_memory_mb=[8192.0, 4096.0, 2048.0],
+               worker_speed=[1.0, 0.5, 2.0])
+    sim_s = simulate(tr, suite("tiered_fixed"),
+                     cfg=SimConfig(**cfg)).summary()
+    fleet_s = replay(tr, suite("tiered_fixed"),
+                     cfg=FleetConfig(**cfg)).summary()
+    _identical(sim_s, fleet_s)
+
+
+def test_counters_survive_long_tiered_traces():
+    for policy in TIERED_POLICIES:
+        tr = azure_like(600.0, num_functions=10, seed=13)
+        sim = Simulator(tr, suite(policy),
+                        cfg=SimConfig(num_workers=2,
+                                      worker_memory_mb=6144.0))
+        sim.run()
+        sim.state.check_counters()
+
+
+# --------------------------------------------------------------------------- #
+# acceptance: graded ladder Pareto-dominates binary fixed TTL
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("trace_name,mk", [
+    ("azure_like", lambda: azure_like(600.0, num_functions=20, seed=11)),
+    ("rare", lambda: rare(inter_arrival=150.0, horizon=30000.0, jitter=0.3,
+                          num_functions=4, seed=5)),
+])
+def test_graded_ladder_pareto_dominates_binary_ttl(trace_name, mk):
+    tr = mk()
+    graded = simulate(tr, suite("tiered_spes")).summary()
+    short = simulate(tr, suite("provider_short")).summary()
+    long_ = simulate(tr, suite("provider_default")).summary()
+    # strictly better than the retention-matched binary point on BOTH axes
+    assert graded["latency_p99_s"] < short["latency_p99_s"]
+    assert graded["idle_gb_s"] < short["idle_gb_s"]
+    # and not dominated by the long-retention binary point
+    assert graded["idle_gb_s"] < long_["idle_gb_s"]
+
+
+# --------------------------------------------------------------------------- #
+# the O(log W) placement index
+# --------------------------------------------------------------------------- #
+
+
+def test_first_fit_index_matches_linear_scan():
+    import numpy as np
+    rng = np.random.default_rng(0)
+    caps = [float(c) for c in rng.integers(1024, 16384, size=33)]
+    st = ClusterState(_fns(1), num_workers=33, worker_memory_mb=caps)
+    for w in range(33):
+        st.reserve(w, float(rng.integers(0, int(caps[w]))))
+    for need in (64.0, 512.0, 2048.0, 8192.0, 20000.0):
+        scan = next((w for w in range(33) if st.free_mb(w) >= need), None)
+        assert st.first_fit_worker(need) == scan, need
+    # best-fit: most free, ties to lowest index
+    frees = [st.free_mb(w) for w in range(33)]
+    w, free = st.max_free_worker()
+    assert free == max(frees) and w == frees.index(max(frees))
+
+
+def test_placement_policies_track_kernel_mutations():
+    from repro.core.policies.base import Placement
+    from repro.core.policies.scheduling import CASPlacement
+    st = ClusterState(_fns(4), num_workers=3, worker_memory_mb=2048.0)
+    ctx = ClusterContext(st, CM)
+    fn = st.functions["fn0"]
+    assert Placement().choose_worker(fn, ctx) == 0
+    assert CASPlacement().choose_worker(fn, ctx) == 0   # tie -> lowest id
+    a = st.admit("fn0", 0, 0.0)
+    assert Placement().choose_worker(fn, ctx) == 0      # 1024 left fits
+    st.admit("fn1", 0, 0.0)                             # worker 0 now full
+    assert Placement().choose_worker(fn, ctx) == 1
+    assert CASPlacement().choose_worker(fn, ctx) == 1
+    st.acquire(a, 0.0)
+    st.release_slot(a, 1.0)
+    st.to_idle(a, 1.0)
+    st.demote(a, WarmthTier.SNAPSHOT_READY, 2.0)
+    # snapshot residue (20.48 MB) still blocks a full 1024 MB placement...
+    assert Placement().choose_worker(fn, ctx) == 1
+    st.destroy(a, 3.0)
+    assert Placement().choose_worker(fn, ctx) == 0      # ...destroy frees it
+    big = FunctionSpec(name="big", package_mb=1.0, memory_mb=4096.0)
+    assert Placement().choose_worker(big, ctx) is None
