@@ -1,39 +1,17 @@
 """Table 5 — Cold-Start-Frequency reduction techniques, simulated on four
-trace families with the measured-calibrated cost model."""
-import os
+trace families with the measured-calibrated cost model.
 
-from repro.core.costmodel import CostModel
-from repro.core.policies import suite
-from repro.core.simulator import simulate
-from repro.core.workload import azure_like, bursty, diurnal, rare
-
-POLICIES = ["cold_always", "provider_default", "faascache", "lcs",
-            "periodic_ping", "prewarm_ewma", "prewarm_markov",
-            "prewarm_histogram", "rl_keepalive", "cas", "ensure",
-            "hybrid_prewarm", "beyond_combo"]
-
-TRACES = {
-    "azure": lambda: azure_like(900.0, num_functions=25, seed=11),
-    "bursty": lambda: bursty(0.05, 8.0, 600.0, num_functions=4, seed=12),
-    "diurnal": lambda: diurnal(2.0, 900.0, period=300.0, num_functions=4,
-                               seed=13),
-    "rare": lambda: rare(130.0, 2000.0, num_functions=4, seed=14),
-}
-
-
-def _cost_model():
-    if os.path.exists("calibration.json"):
-        return CostModel.from_calibration("calibration.json")
-    return CostModel()
+Thin declaration over the scenario registry: the grid is
+``repro.experiments``' ``csf_table5`` sweep (4 workloads x 13 policies);
+run any cell directly with ``python -m repro.experiments sweep csf_table5``.
+"""
+from repro.experiments import run_sweep
 
 
 def run(emit):
-    cm = _cost_model()
-    for tname, mk in TRACES.items():
-        tr = mk()
-        for pol in POLICIES:
-            s = simulate(tr, suite(pol), cost_model=cm).summary()
-            emit(f"csf/{tname}/{pol}/p95_latency", s["latency_p95_s"] * 1e6,
-                 f"cold%={s['cold_start_frequency'] * 100:.2f} "
-                 f"waste%={s['wasted_fraction'] * 100:.1f} "
-                 f"cost=${s['cost_usd']:.4f}")
+    for sc, s in run_sweep("csf_table5"):
+        emit(f"csf/{sc.workload.label}/{sc.policy}/p95_latency",
+             s["latency_p95_s"] * 1e6,
+             f"cold%={s['cold_start_frequency'] * 100:.2f} "
+             f"waste%={s['wasted_fraction'] * 100:.1f} "
+             f"cost=${s['cost_usd']:.4f}")

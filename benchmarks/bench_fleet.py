@@ -1,187 +1,105 @@
 """Fleet replay benchmark — predictive autoscaling vs fixed TTL under live
 concurrent load (virtual clock, cost-model backend).
 
-Two questions:
-  1. policy comparison: fixed-TTL vs histogram-prewarm vs hybrid
-     (histogram+Markov) prewarm vs RL keep-alive on the same ``azure_like``
-     and ``flash_crowd`` traces — cold-start rate, P95 latency, idle GB-s.
-     On the smoke-sized azure config the predictor-driven hybrid suite
-     (shortened keep-alive + prewarm) must dominate the fixed TTL on cold
-     rate at equal-or-lower idle GB-s (acceptance criterion; pinned by
+Thin declaration over the scenario registry (``repro.experiments``):
+
+  1. policy comparison: the ``fleet_policies`` sweep — fixed-TTL vs
+     histogram-prewarm vs hybrid (histogram+Markov) prewarm vs RL
+     keep-alive on the same ``azure_like`` and ``flash_crowd`` traces —
+     cold-start rate, P95 latency, idle GB-s.  On the smoke-sized azure
+     config the predictor-driven hybrid suite (shortened keep-alive +
+     prewarm) must dominate the fixed TTL on cold rate at equal-or-lower
+     idle GB-s (acceptance criterion; pinned by
      ``tests/test_fleet.py::test_predictive_policy_dominates_fixed_ttl_on_azure_trace``).
-  2. sim-vs-fleet calibration: the SAME trace through ``core/simulator.py``
-     and ``fleet/loadgen.py`` — the two ledgers share a field schema, so the
-     delta per metric is the fleet-vs-sim modeling gap.
+  2. fleet-only levers: the ``fleet_levers/*`` scenarios (micro-batching,
+     concurrency slots) on a constrained cluster.
+  3. sim-vs-fleet calibration: the ``calib/*`` scenarios through BOTH
+     drivers; ``experiments.compare()`` is the ledger-identity gate —
+     the warmth-tier and pause-pool cells must be drift-free field for
+     field.
 """
-import os
+from repro.experiments import (compare, get, run_summary, run_sweep,
+                               run as run_scenario)
 
-from repro.core.costmodel import CostModel
-from repro.core.policies import suite
-from repro.core.policies.keepalive import FixedTTL
-from repro.core.simulator import SimConfig, simulate
-from repro.core.workload import azure_like, flash_crowd
-from repro.fleet import FleetConfig, replay
-
-NUM_WORKERS = 4
-WORKER_MB = 16_384.0
-
-
-def _policies():
-    return {
-        "fixed_ttl_60": lambda: suite("provider_short"),
-        "fixed_ttl_600": lambda: suite("provider_default"),
-        "histogram_prewarm": lambda: suite("prewarm_histogram",
-                                           keepalive=FixedTTL(50.0)),
-        "hybrid_prewarm": lambda: suite("hybrid_prewarm",
-                                        keepalive=FixedTTL(50.0)),
-        "rl_keepalive": lambda: suite("rl_keepalive"),
-    }
-
-
-TRACES = {
-    "azure_like": lambda: azure_like(600.0, num_functions=20, seed=11),
-    "flash_crowd": lambda: flash_crowd(base_rate=0.5, spike_rate=40.0,
-                                       horizon=300.0, num_functions=4,
-                                       seed=1),
-}
-
-
-def _cost_model():
-    if os.path.exists("calibration.json"):
-        return CostModel.from_calibration("calibration.json")
-    return CostModel()
-
-
-def _cfg(**kw):
-    return FleetConfig(num_workers=NUM_WORKERS, worker_memory_mb=WORKER_MB,
-                       **kw)
+CALIB_SCENARIOS = ("calib/default", "calib/concurrency4",
+                   "calib/heterogeneous", "calib/tiered_fixed",
+                   "calib/tiered_spes", "calib/pause_pool")
+TIER_EXACT = ("calib/tiered_fixed", "calib/tiered_spes", "calib/pause_pool")
 
 
 def run(emit):
-    cm = _cost_model()
     # -- 1. policy comparison on the fleet (virtual clock) ---------------- #
-    for tname, mk_trace in TRACES.items():
-        tr = mk_trace()
-        for pname, mk_suite in _policies().items():
-            s = replay(tr, mk_suite(), cost_model=cm, cfg=_cfg()).summary()
-            emit(f"fleet/{tname}/{pname}/p95_latency",
-                 s["latency_p95_s"] * 1e6,
-                 f"cold%={s['cold_start_frequency'] * 100:.2f} "
-                 f"idle_gb_s={s['idle_gb_s']:.1f} "
-                 f"cost=${s['cost_usd']:.4f}")
+    for sc, s in run_sweep("fleet_policies"):
+        pname = sc.name.rsplit("/", 1)[-1]
+        emit(f"fleet/{sc.workload.label}/{pname}/p95_latency",
+             s["latency_p95_s"] * 1e6,
+             f"cold%={s['cold_start_frequency'] * 100:.2f} "
+             f"idle_gb_s={s['idle_gb_s']:.1f} "
+             f"cost=${s['cost_usd']:.4f}")
 
     # -- 2. fleet-only levers: micro-batching + concurrency slots --------- #
     # constrained cluster (2 workers x 4 GB): the spike MUST queue, so the
     # levers show up in tail latency instead of disappearing into headroom
-    tr = TRACES["flash_crowd"]()
-    small = dict(num_workers=2, worker_memory_mb=4096.0)
-    for label, cfg in [
-        ("serial", FleetConfig(**small)),
-        ("batch8", FleetConfig(max_batch=8, **small)),
-        ("slots4", FleetConfig(slots_per_replica=4, **small)),
-    ]:
-        s = replay(tr, suite("provider_default"), cost_model=cm,
-                   cfg=cfg).summary()
+    for label in ("serial", "batch8", "slots4"):
+        s = run_summary(f"fleet_levers/{label}", driver="fleet")
         emit(f"fleet/flash_crowd/{label}/p95_latency",
              s["latency_p95_s"] * 1e6,
              f"p99={s['latency_p99_s'] * 1e3:.1f}ms "
              f"thr={s['throughput_rps']:.1f}rps")
 
-    # -- 3. sim-vs-fleet calibration: same trace, both engines ------------ #
-    tr = TRACES["azure_like"]()
-    sim_s = simulate(tr, suite("provider_default"), cost_model=cm,
-                     cfg=SimConfig(num_workers=NUM_WORKERS,
-                                   worker_memory_mb=WORKER_MB)).summary()
-    fleet_s = replay(tr, suite("provider_default"), cost_model=cm,
-                     cfg=_cfg()).summary()
-    assert set(sim_s) == set(fleet_s), "sim/fleet ledger schema diverged"
-    for key in ("latency_p95_s", "cold_start_frequency", "idle_gb_s"):
-        delta = fleet_s[key] - sim_s[key]
-        emit(f"fleet/calibration/{key}", abs(delta) * 1e6,
-             f"sim={sim_s[key]:.4f} fleet={fleet_s[key]:.4f}")
-
-    # -- 3b. scenario calibration: the kernel-backed scenarios must also
-    #        replay ledger-identically (concurrency>1, heterogeneous
-    #        workers, warmth-tier ladders, generic pause pools) — same
-    #        trace through both drivers, delta per metric ---------------- #
-    from repro.core.workload import flash_crowd as _fc, poisson as _poisson
-    scenarios = {
-        "concurrency4": (
-            _fc(base_rate=0.5, spike_rate=30.0, horizon=120.0,
-                num_functions=2, seed=1, container_concurrency=4),
-            "provider_default",
-            dict(num_workers=2, worker_memory_mb=4096.0)),
-        "heterogeneous": (
-            _poisson(rate=2.0, horizon=200.0, num_functions=6, seed=3),
-            "provider_default",
-            dict(num_workers=3, worker_memory_mb=[8192.0, 4096.0, 2048.0],
-                 worker_speed=[1.0, 0.5, 2.0])),
-        "tiered_fixed": (
-            azure_like(300.0, num_functions=12, seed=7), "tiered_fixed",
-            dict(num_workers=2, worker_memory_mb=8192.0)),
-        "tiered_spes": (
-            azure_like(300.0, num_functions=12, seed=7), "tiered_spes",
-            dict(num_workers=2, worker_memory_mb=8192.0)),
-        "pause_pool": (
-            azure_like(300.0, num_functions=12, seed=7), "pause_pool",
-            dict(num_workers=2, worker_memory_mb=8192.0)),
-    }
-    tier_deltas = []
-    for label, (trace, pol, kw) in scenarios.items():
-        sim_s = simulate(trace, suite(pol), cost_model=cm,
-                         cfg=SimConfig(**kw)).summary()
-        fleet_s = replay(trace, suite(pol), cost_model=cm,
-                         cfg=FleetConfig(**kw)).summary()
+    # -- 3. sim-vs-fleet calibration: every calib scenario through both
+    #       drivers; the kernel-backed cells (concurrency>1, heterogeneous
+    #       workers, warmth-tier ladders, generic pause pools) must replay
+    #       ledger-identically --------------------------------------------- #
+    drifted = []
+    for name in CALIB_SCENARIOS:
+        sc = get(name)
+        sim_s = run_scenario(sc, "sim").summary()
+        fleet_s = run_scenario(sc, "fleet").summary()
+        assert set(sim_s) == set(fleet_s), "sim/fleet ledger schema diverged"
+        diff = compare(sim_s, fleet_s)
+        label = name.rsplit("/", 1)[-1]
         for key in ("latency_p95_s", "cold_start_frequency", "idle_gb_s",
                     "promotions", "demotions"):
-            delta = fleet_s[key] - sim_s[key]
-            if label.startswith(("tiered", "pause")):
-                tier_deltas.append((label, key, delta))
-            emit(f"fleet/calibration_{label}/{key}", abs(delta) * 1e6,
-                 f"sim={sim_s[key]:.4f} fleet={fleet_s[key]:.4f}")
-    assert all(d == 0 for _, _, d in tier_deltas), \
-        f"sim-vs-fleet tier calibration drift: {tier_deltas}"
+            f = diff.fields[key]
+            emit(f"fleet/calibration_{label}/{key}", abs(f.delta) * 1e6,
+                 f"sim={f.a:.4f} fleet={f.b:.4f}")
+        if name in TIER_EXACT and not diff.identical:
+            drifted.append((name, diff.drift()))
+    assert not drifted, f"sim-vs-fleet tier calibration drift: {drifted}"
 
     # -- 4. acceptance gate: predictor-driven dominates fixed TTL --------- #
-    tr = TRACES["azure_like"]()
-    fixed = replay(tr, suite("provider_short"), cost_model=cm,
-                   cfg=_cfg()).summary()
-    pred = replay(tr, suite("hybrid_prewarm", keepalive=FixedTTL(50.0)),
-                  cost_model=cm, cfg=_cfg()).summary()
+    fleet = get("fleet")
+    fixed = run_summary(fleet.with_overrides(
+        {"policy": "provider_short"}), driver="fleet")
+    pred = run_summary(fleet.with_overrides(
+        {"policy": "hybrid_prewarm", "keepalive_ttl": 50.0}), driver="fleet")
     ok = (pred["cold_start_frequency"] < fixed["cold_start_frequency"]
           and pred["idle_gb_s"] <= fixed["idle_gb_s"])
     emit("fleet/azure_like/predictive_dominates_fixed",
-         pred["cold_start_frequency"] * 1e6,
+         pred["cold_start_frequency"] * 100,
          f"{'ok' if ok else 'FAIL'} "
          f"cold%={pred['cold_start_frequency'] * 100:.2f}"
          f"-vs-{fixed['cold_start_frequency'] * 100:.2f} "
-         f"idle={pred['idle_gb_s']:.0f}-vs-{fixed['idle_gb_s']:.0f}")
+         f"idle={pred['idle_gb_s']:.0f}-vs-{fixed['idle_gb_s']:.0f}",
+         units="pct")
 
 
 def tier_smoke() -> int:
-    """Fast CI gate: a warmth-tiered suite (PAUSED + SNAPSHOT_READY tiers
-    exercised) replayed through the simulator and the fleet on a virtual
-    clock must produce field-for-field identical ledger summaries."""
-    import math
-
-    cm = _cost_model()
-    tr = azure_like(300.0, num_functions=12, seed=7)
+    """Fast CI gate: the warmth-tiered calibration scenarios (PAUSED +
+    SNAPSHOT_READY tiers exercised) replayed through the simulator and the
+    fleet on a virtual clock must produce field-for-field identical ledger
+    summaries — ``experiments.compare()`` is the check."""
     bad = []
-    for pol in ("tiered_fixed", "tiered_spes", "pause_pool"):
-        sim_s = simulate(tr, suite(pol), cost_model=cm,
-                         cfg=SimConfig(num_workers=2,
-                                       worker_memory_mb=8192.0)).summary()
-        fleet_s = replay(tr, suite(pol), cost_model=cm,
-                         cfg=FleetConfig(num_workers=2,
-                                         worker_memory_mb=8192.0)).summary()
-        assert sim_s["demotions"] > 0 or pol == "pause_pool", \
-            f"{pol}: ladder never engaged"
-        for k in set(sim_s) | set(fleet_s):
-            a, b = sim_s.get(k), fleet_s.get(k)
-            same = (a == b or (isinstance(a, float) and isinstance(b, float)
-                               and math.isnan(a) and math.isnan(b)))
-            if not same:
-                bad.append((pol, k, a, b))
+    for name in TIER_EXACT:
+        sc = get(name)
+        sim = run_scenario(sc, "sim")
+        fleet = run_scenario(sc, "fleet")
+        assert sim.summary()["demotions"] > 0 or sc.policy == "pause_pool", \
+            f"{sc.policy}: ladder never engaged"
+        diff = compare(sim, fleet)
+        if not diff.identical:
+            bad.append((name, str(diff)))
     if bad:
         print("FAIL: sim-vs-fleet tiered ledger drift:")
         for row in bad:
@@ -198,7 +116,9 @@ if __name__ == "__main__":
     if "--tier-smoke" in sys.argv:
         sys.exit(tier_smoke())
 
-    def _emit(name, value, derived=""):
-        print(f"{name},{value:.1f},{derived}", flush=True)
+    try:
+        from benchmarks.emit import csv_emit   # python -m benchmarks.bench_fleet
+    except ImportError:
+        from emit import csv_emit              # python benchmarks/bench_fleet.py
 
-    run(_emit)
+    run(csv_emit)

@@ -1,27 +1,28 @@
 """RQ4 / §5.4 — the same workload and mitigation policies across platform
 cost profiles (AWS Lambda, GCF, Azure, OpenWhisk, Firecracker): cold-start
 fingerprints differ per platform architecture, as the surveyed measurements
-report (Wang et al., Lee et al., Manner et al.)."""
-from repro.core.costmodel import PLATFORM_PROFILES, platform_cost_model, \
-    platform_keep_alive
-from repro.core.policies import suite
-from repro.core.policies.base import PolicySuite
-from repro.core.policies.keepalive import FixedTTL
-from repro.core.simulator import simulate
-from repro.core.workload import azure_like
+report (Wang et al., Lee et al., Manner et al.).
+
+Thin declaration over the ``platforms_rq4`` sweep — every (platform,
+policy) cell is a scenario (platform profile drives the cost model; the
+``platform_default`` policy is FixedTTL at that platform's keep-alive).
+The workload is the shared ``azure_long`` spec, seed-derived from the
+scenario master seed (the same trace underlies ``bench_tradeoffs``).
+"""
+from repro.core.costmodel import PLATFORM_PROFILES
+from repro.experiments import run_sweep
 
 
 def run(emit):
-    tr = azure_like(900.0, num_functions=20, seed=41)
+    by = {}
+    for sc, s in run_sweep("platforms_rq4"):
+        by[(sc.platform, sc.policy)] = s
     for platform in PLATFORM_PROFILES:
-        cm = platform_cost_model(platform)
-        pol = PolicySuite(name=platform,
-                          keepalive=FixedTTL(platform_keep_alive(platform)))
-        s = simulate(tr, pol, cost_model=cm).summary()
+        s = by[(platform, "platform_default")]
         emit(f"platform/{platform}/cold_p50", s["cold_p50_s"] * 1e6,
              f"cold%={s['cold_start_frequency'] * 100:.2f} "
              f"cost=${s['cost_usd']:.4f}")
         # snapshot mitigation closes the gap on every platform
-        s2 = simulate(tr, suite("snapshot_restore"), cost_model=cm).summary()
+        s2 = by[(platform, "snapshot_restore")]
         emit(f"platform/{platform}/cold_p50_snapshot", s2["cold_p50_s"] * 1e6,
              f"{s['cold_p50_s'] / max(s2['cold_p50_s'], 1e-9):.2f}x better")

@@ -1,27 +1,24 @@
 """RQ1 / Fig.11 — cold-start impact on every QoS parameter (latency,
-throughput, SLA, cost, scalability, resource consumption)."""
-from repro.core.policies import suite
-from repro.core.simulator import simulate
-from repro.core.workload import poisson
+throughput, SLA, cost, scalability, resource consumption).
+
+Thin declaration over the ``qos_fig11`` sweep; the scenario carries the
+0.5 s SLA threshold.  Values emit in native units (``units=``) instead of
+the old ``* 1e6``/``* 1e8`` scale hacks.
+"""
+from repro.experiments import run_sweep
 
 
 def run(emit):
-    tr = poisson(rate=0.2, horizon=1500.0, num_functions=5, seed=21)
-    scenarios = {
-        "with_cold_starts": "provider_short",
-        "cold_eliminated": "periodic_ping",
-        "always_cold": "cold_always",
-    }
-    for tag, pol in scenarios.items():
-        s = simulate(tr, suite(pol)).summary(sla_latency_s=0.5)
+    for sc, s in run_sweep("qos_fig11"):
+        tag = sc.name.rsplit("/", 1)[-1]
         emit(f"qos/{tag}/latency_p50", s["latency_p50_s"] * 1e6, "")
         emit(f"qos/{tag}/latency_p99", s["latency_p99_s"] * 1e6, "")
-        emit(f"qos/{tag}/throughput_rps", s["throughput_rps"] * 1e6,
-             "value=rps*1e6")
-        emit(f"qos/{tag}/sla_violation_pct", s["sla_violation_rate"] * 1e8,
-             "value=pct*1e6")
-        emit(f"qos/{tag}/cost_usd", s["cost_usd"] * 1e6, "value=$*1e6")
-        emit(f"qos/{tag}/launch_rate", s["scalability_launch_rate"] * 1e6,
-             "containers/s*1e6")
-        emit(f"qos/{tag}/idle_gb_s", s["idle_gb_s"] * 1e6,
-             "resource waste (energy proxy)")
+        emit(f"qos/{tag}/throughput_rps", s["throughput_rps"], "",
+             units="rps")
+        emit(f"qos/{tag}/sla_violation_pct", s["sla_violation_rate"] * 100,
+             "", units="pct")
+        emit(f"qos/{tag}/cost_usd", s["cost_usd"], "", units="usd")
+        emit(f"qos/{tag}/launch_rate", s["scalability_launch_rate"],
+             "containers/s", units="per_s")
+        emit(f"qos/{tag}/idle_gb_s", s["idle_gb_s"],
+             "resource waste (energy proxy)", units="gb_s")

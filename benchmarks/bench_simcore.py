@@ -116,7 +116,8 @@ def run(emit, *, scales=SCALES, json_path="BENCH_simcore.json"):
         r = _one(n, horizon)
         results.append(r)
         emit(f"simcore/azure_like/{n}fns/events_per_s", r["events_per_s"],
-             f"inv={r['invocations']} wall={r['wall_s']:.2f}s")
+             f"inv={r['invocations']} wall={r['wall_s']:.2f}s",
+             units="per_s")
     _placement_row(emit)
     with open(json_path, "w") as f:
         json.dump(results, f, indent=2)
@@ -126,8 +127,10 @@ def run(emit, *, scales=SCALES, json_path="BENCH_simcore.json"):
 def main() -> int:
     smoke = "--smoke" in sys.argv
 
-    def emit(name, value, derived=""):
-        print(f"{name},{value:.1f},{derived}", flush=True)
+    try:
+        from benchmarks.emit import csv_emit as emit
+    except ImportError:        # run as a script: benchmarks/ is sys.path[0]
+        from emit import csv_emit as emit
 
     if smoke:
         results = run(emit, scales=(SMOKE_SCALE,),

@@ -5,12 +5,13 @@ set of pre-warmth states with per-function selection of the cheapest tier
 that still meets latency beats the binary keep-alive's two-point trade-off
 ("burn full idle GB-s" vs "pay full cold starts").
 
-For each trace the sweep replays the binary fixed-TTL family
-(provider_short τ=60 s, provider_default τ=600 s) against the graded
-ladders (``tiered_fixed`` static dwells, ``tiered_spes`` predictive tier
-chooser) and emits (p99 latency, idle GB-s, cold-start frequency, idle
-split per tier, promotions/demotions) per point, plus the ladder's
-transition-cost matrix for the default function shape.
+The grid is the registry's ``tiers_pareto`` sweep: for each trace it
+replays the binary fixed-TTL family (provider_short τ=60 s,
+provider_default τ=600 s) against the graded ladders (``tiered_fixed``
+static dwells, ``tiered_spes`` predictive tier chooser) and emits
+(p99 latency, idle GB-s, cold-start frequency, idle split per tier,
+promotions/demotions) per point, plus the ladder's transition-cost matrix
+for the default function shape.
 
 Acceptance gate (also pinned by ``tests/test_tiers.py``): on both the
 ``azure_like`` and ``rare`` traces the graded ladder Pareto-dominates the
@@ -23,26 +24,10 @@ binary fixed-TTL keep-alive —
 """
 from repro.core.costmodel import CostModel
 from repro.core.lifecycle import FunctionSpec
-from repro.core.policies import suite
-from repro.core.simulator import simulate
-from repro.core.workload import azure_like, rare
+from repro.experiments import run_sweep
+from repro.experiments.catalog import TIERS_BINARY, TIERS_GRADED  # noqa: F401
 
-BINARY = ("provider_short", "provider_default")
-GRADED = ("tiered_fixed", "tiered_spes", "tiered_rl")
 GATE_SUITE = "tiered_spes"
-
-TRACES = {
-    "azure_like": lambda: azure_like(600.0, num_functions=20, seed=11),
-    "rare": lambda: rare(inter_arrival=150.0, horizon=30000.0, jitter=0.3,
-                         num_functions=4, seed=5),
-}
-
-
-def _sweep(tr):
-    out = {}
-    for pol in BINARY + GRADED:
-        out[pol] = simulate(tr, suite(pol)).summary()
-    return out
 
 
 def run(emit):
@@ -53,18 +38,20 @@ def run(emit):
     for (a, b), s in sorted(cm.transition_matrix(fn).items()):
         emit(f"tiers/matrix/{a.name.lower()}->{b.name.lower()}", s * 1e6)
 
+    results = {}
+    for sc, s in run_sweep("tiers_pareto"):
+        results.setdefault(sc.workload.label, {})[sc.policy] = s
+        emit(f"tiers/{sc.workload.label}/{sc.policy}/p99_latency",
+             s["latency_p99_s"] * 1e6,
+             f"idle_gb_s={s['idle_gb_s']:.1f} "
+             f"cold%={s['cold_start_frequency'] * 100:.2f} "
+             f"warm/paused/snap="
+             f"{s['idle_gb_s_warm']:.0f}/{s['idle_gb_s_paused']:.0f}/"
+             f"{s['idle_gb_s_snapshot']:.0f} "
+             f"promo={s['promotions']:.0f} demo={s['demotions']:.0f}")
+
     gates_ok = True
-    for tname, mk in TRACES.items():
-        res = _sweep(mk())
-        for pol, s in res.items():
-            emit(f"tiers/{tname}/{pol}/p99_latency",
-                 s["latency_p99_s"] * 1e6,
-                 f"idle_gb_s={s['idle_gb_s']:.1f} "
-                 f"cold%={s['cold_start_frequency'] * 100:.2f} "
-                 f"warm/paused/snap="
-                 f"{s['idle_gb_s_warm']:.0f}/{s['idle_gb_s_paused']:.0f}/"
-                 f"{s['idle_gb_s_snapshot']:.0f} "
-                 f"promo={s['promotions']:.0f} demo={s['demotions']:.0f}")
+    for tname, res in results.items():
         graded = res[GATE_SUITE]
         short, long_ = res["provider_short"], res["provider_default"]
         dominates_short = (
@@ -84,7 +71,9 @@ def run(emit):
 
 
 if __name__ == "__main__":
-    def _emit(name, value, derived=""):
-        print(f"{name},{value:.1f},{derived}", flush=True)
+    try:
+        from benchmarks.emit import csv_emit   # python -m benchmarks.bench_tiers
+    except ImportError:
+        from emit import csv_emit              # python benchmarks/bench_tiers.py
 
-    run(_emit)
+    run(csv_emit)

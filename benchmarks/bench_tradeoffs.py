@@ -1,29 +1,33 @@
 """§6 open-challenges quantified: the energy/practicality/model-performance
 trade-offs — Pareto of cold-start frequency vs wasted GB-s, and predictor
 accuracy (incl. the §6.3 claim that simple models beat DL on small noisy
-cold-start data)."""
+cold-start data).
+
+The Pareto is the ``tradeoffs_pareto`` sweep (cold-start frequency emits
+in percent with ``units="pct"`` — no more ``* 1e8`` scale hack); the
+predictor study reuses the SAME scenario trace via the registry (the
+shared ``azure_long`` workload, seed-derived — previously this module and
+``bench_platforms`` hardcoded divergent seeds 31 vs 41 for the same
+workload shape).
+"""
 import numpy as np
 
-from repro.core.policies import suite
 from repro.core.predictors import (EWMAPredictor, ExpSmoothingPredictor,
                                    HistogramPredictor, MarkovPredictor)
-from repro.core.simulator import simulate
-from repro.core.workload import azure_like, interarrival_series
+from repro.core.workload import interarrival_series
+from repro.experiments import build_trace, get, run_sweep
 
 
 def run(emit):
-    tr = azure_like(900.0, num_functions=20, seed=31)
     # --- Pareto: frequency vs waste across the whole catalog -------------- #
-    for pol in ["cold_always", "provider_short", "provider_default",
-                "periodic_ping", "prewarm_histogram", "faascache",
-                "beyond_combo"]:
-        s = simulate(tr, suite(pol)).summary()
-        emit(f"pareto/{pol}", s["cold_start_frequency"] * 1e8,
-             f"waste_gb_s={s['idle_gb_s']:.1f} (freq%*1e6)")
+    for sc, s in run_sweep("tradeoffs_pareto"):
+        emit(f"pareto/{sc.policy}", s["cold_start_frequency"] * 100,
+             f"waste_gb_s={s['idle_gb_s']:.1f}", units="pct")
 
     # --- predictor accuracy on a noisy arrival process -------------------- #
-    # hot function + its gap series come from the trace's cached
-    # per-function time index (one pass, not a rescan per function)
+    # hot function + its gap series come from the scenario's trace (cached
+    # per-function time index — one pass, not a rescan per function)
+    tr = build_trace(get("tradeoffs"))
     counts = tr.counts_by_function()
     hot = max(counts, key=counts.get)
     times = np.cumsum(interarrival_series(tr, hot))

@@ -1,0 +1,19 @@
+"""Shared CSV emit for the benchmark harness and standalone module runs.
+
+One definition of the row format (``name,value,derived,units``) so
+``benchmarks/run.py`` and the per-module ``__main__`` blocks cannot drift.
+Values keep full precision: native-unit rows (``units="usd"``,
+``units="pct"``, ...) can be far below 0.1, so small magnitudes format
+with 6 significant digits instead of the historical ``.1f``.
+"""
+
+
+def fmt_value(value: float) -> str:
+    if abs(value) >= 1000:
+        return f"{value:.1f}"
+    return f"{value:.6g}"
+
+
+def csv_emit(name: str, value: float, derived: str = "", *,
+             units: str = "us") -> None:
+    print(f"{name},{fmt_value(value)},{derived},{units}", flush=True)

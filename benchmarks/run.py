@@ -1,6 +1,9 @@
 """Benchmark harness — one module per paper table/figure (DESIGN.md §5).
 
-Prints ``name,us_per_call,derived`` CSV.  Modules:
+Prints ``name,value,derived,units`` CSV (the first three columns keep the
+historical ``name,us_per_call,derived`` layout; ``units`` is appended so
+values no longer need ``* 1e8``-style scale hacks — rows default to
+``units="us"``).  Modules:
   bench_factors    RQ2 / Fig.10+12: measured cold-start anatomy & factors
   bench_qos        RQ1 / Fig.11: QoS impact of cold starts
   bench_csl        Table 4: latency-reduction techniques (real, measured)
@@ -15,9 +18,18 @@ Prints ``name,us_per_call,derived`` CSV.  Modules:
                    count; writes BENCH_simcore.json — the perf trajectory)
   bench_roofline   dry-run/roofline summary (deliverables e+g)
 
+The simulated modules are thin declarations over the scenario registry
+(``repro.experiments``); run any cell directly with
+``python -m repro.experiments run/sweep``.
+
+CLI:
+  python -m benchmarks.run [--list] [--only MODULE]... [--json PATH] [MODULE]
+
 Exits nonzero when any module raises (its row is tagged ERROR), so CI and
 scripts can gate on the whole harness.
 """
+import argparse
+import json
 import sys
 import time
 import traceback
@@ -26,6 +38,7 @@ from benchmarks import (bench_csf, bench_csl, bench_factors, bench_fleet,
                         bench_platforms, bench_qos, bench_roofline,
                         bench_serving, bench_simcore, bench_tiers,
                         bench_tradeoffs)
+from benchmarks.emit import csv_emit
 
 MODULES = [
     ("factors", bench_factors),
@@ -42,26 +55,59 @@ MODULES = [
 ]
 
 
-def main() -> int:
-    only = sys.argv[1] if len(sys.argv) > 1 else None
-    print("name,us_per_call,derived")
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m benchmarks.run")
+    ap.add_argument("module", nargs="?", default=None,
+                    help="run only this module (positional back-compat)")
+    ap.add_argument("--list", action="store_true", dest="list_modules",
+                    help="print module names and exit")
+    ap.add_argument("--only", action="append", default=[], metavar="MODULE",
+                    help="run only the named module(s); repeatable")
+    ap.add_argument("--json", metavar="PATH",
+                    help="also write every row as a JSON list")
+    args = ap.parse_args(argv)
 
-    def emit(name: str, us: float, derived: str = ""):
-        print(f"{name},{us:.1f},{derived}", flush=True)
+    if args.list_modules:
+        for name, mod in MODULES:
+            doc = (mod.__doc__ or "").strip().splitlines()[0]
+            print(f"{name:12s} {doc}")
+        return 0
+
+    only = set(args.only)
+    if args.module:
+        only.add(args.module)
+    known = {name for name, _ in MODULES}
+    if only - known:
+        print(f"unknown module(s): {', '.join(sorted(only - known))} "
+              f"(try --list)", file=sys.stderr)
+        return 2
+
+    rows = []
+    print("name,value,derived,units")
+
+    def emit(name: str, value: float, derived: str = "", *,
+             units: str = "us"):
+        csv_emit(name, value, derived, units=units)
+        rows.append({"name": name, "value": value, "units": units,
+                     "derived": derived})
 
     failed = []
     for name, mod in MODULES:
-        if only and only != name:
+        if only and name not in only:
             continue
         t0 = time.perf_counter()
         try:
             mod.run(emit)
-            emit(f"_module/{name}/wall", (time.perf_counter() - t0) * 1e6, "ok")
+            emit(f"_module/{name}/wall", (time.perf_counter() - t0) * 1e6,
+                 "ok")
         except Exception:
             traceback.print_exc()
             emit(f"_module/{name}/wall", (time.perf_counter() - t0) * 1e6,
                  "ERROR")
             failed.append(name)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=1)
     if failed:
         print(f"FAILED modules: {', '.join(failed)}", file=sys.stderr)
     return 1 if failed else 0

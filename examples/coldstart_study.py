@@ -5,30 +5,31 @@ in the taxonomy (keep-alive, pools, predictive prewarming, scheduling,
 snapshot restore, fusion) with the measured-calibrated cost model, and
 prints the QoS comparison + the §6.1 latency/waste Pareto.
 
+The taxonomy sweep is one registry declaration (``study_catalog``); the
+fusion study reuses the registered chain scenario's trace and suite —
+no hand-assembled simulator plumbing anywhere.
+
 Run:  PYTHONPATH=src python examples/coldstart_study.py
 """
 from repro.core.metrics import format_summary
-from repro.core.policies import CATALOG, suite
 from repro.core.policies.fusion import apply_fusion
 from repro.core.simulator import simulate
-from repro.core.workload import azure_like, chains
+from repro.experiments import build_trace, get, run_sweep
 
 
 def main():
-    tr = azure_like(900.0, num_functions=25, seed=0)
+    tr = build_trace(get("study"))
     print(f"workload: {len(tr.invocations)} invocations / "
           f"{len(tr.functions)} functions / {tr.horizon:.0f}s horizon\n")
     print("== taxonomy sweep " + "=" * 50)
-    for name in CATALOG:
-        if name == "prewarm_lstm":
-            continue  # slow on CPU; see benchmarks/bench_tradeoffs.py
-        led = simulate(tr, suite(name))
-        print(format_summary(name, led.summary()))
+    for sc, summary in run_sweep("study_catalog"):
+        print(format_summary(sc.policy, summary))
 
     print("\n== function fusion on a 3-stage chain workload " + "=" * 20)
-    ctr = chains(rate=0.05, horizon=600.0, chain_len=3, seed=1)
-    plain = simulate(ctr, suite("provider_short")).summary()
-    fused = simulate(apply_fusion(ctr), suite("provider_short")).summary()
+    chains_sc = get("study_chains")
+    ctr = build_trace(chains_sc)
+    plain = simulate(ctr, chains_sc.suite()).summary()
+    fused = simulate(apply_fusion(ctr), chains_sc.suite()).summary()
     print(format_summary("chains_unfused", plain))
     print(format_summary("chains_fused", fused))
     print(f"fusion removed {plain['cold_starts'] - fused['cold_starts']:.0f} "

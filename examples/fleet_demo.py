@@ -3,66 +3,42 @@
 Part 1 (default, fast): replay an Azure-shaped trace on the VIRTUAL clock
 with the cost-model backend, comparing fixed-TTL against predictor-driven
 autoscaling — the paper's CSF trade-off measured on the fleet stack
-(frontend queues -> engine pool -> autoscaler).
+(frontend queues -> engine pool -> autoscaler).  This is the registry's
+``fleet_demo`` sweep.
 
-Part 2 (``--real``): the SAME fleet loop on a scaled WALL clock with REAL
-JAX engines: cold starts pay genuine XLA compilation, snapshot restores go
-through the SnapshotStore, every duration is measured.
+Part 2 (``--real``): the SAME policy vocabulary on a scaled WALL clock
+with REAL JAX engines: cold starts pay genuine XLA compilation, snapshot
+restores go through the SnapshotStore, every duration is measured.  This
+is the registered ``engine_smoke`` scenario under ``driver="engine"`` —
+the exact same spec would replay through ``driver="sim"`` too.
 
 Run:  PYTHONPATH=src python examples/fleet_demo.py [--real]
 """
 import sys
 
 from repro.core.metrics import format_summary
-from repro.core.policies import suite
-from repro.core.policies.keepalive import FixedTTL
-from repro.core.workload import azure_like, rare
-from repro.fleet import (EngineBackend, EngineProfile, FleetConfig,
-                         FleetRunner, WallClock, replay)
+from repro.experiments import get, run, run_sweep, summarize
 
 
 def virtual_demo():
     print("== virtual clock: policy comparison on azure_like(600s) ==")
-    tr = azure_like(600.0, num_functions=20, seed=11)
-    cfg = FleetConfig(num_workers=4, worker_memory_mb=16_384.0)
-    for name, mk in [
-        ("fixed_ttl_60", lambda: suite("provider_short")),
-        ("fixed_ttl_600", lambda: suite("provider_default")),
-        ("hybrid_prewarm", lambda: suite("hybrid_prewarm",
-                                         keepalive=FixedTTL(50.0))),
-        ("rl_keepalive", lambda: suite("rl_keepalive")),
-    ]:
-        s = replay(tr, mk(), cfg=cfg).summary()
-        print(format_summary(name, s)
+    for sc, s in run_sweep("fleet_demo"):
+        print(format_summary(sc.name.rsplit("/", 1)[-1], s)
               + f" idle={s['idle_gb_s']:8.1f}GB-s")
 
 
 def real_demo():
     print("== wall clock (60x): real engines, measured cold starts ==")
-    from repro.serving.engine import SnapshotStore
     # a sparse periodic trace: every gap exceeds the 20s TTL, so each
     # invocation is cold UNLESS the histogram prewarm restores in time
-    tr = rare(inter_arrival=120.0, horizon=600.0, jitter=0.05,
-              num_functions=1, seed=3)
-    store = SnapshotStore()
-    backend = EngineBackend(store=store, profiles={
-        name: EngineProfile(arch="xlstm-125m", max_seq=16, batch=1,
-                            decode_steps=2)
-        for name in tr.functions
-    })
-    pol = suite("prewarm_histogram", keepalive=FixedTTL(20.0))
-    pol.startup = type(pol.startup)(snapshot=True)
-    runner = FleetRunner(tr, pol,
-                         cfg=FleetConfig(num_workers=1,
-                                         worker_memory_mb=4096.0),
-                         clock=WallClock(speed=60.0), backend=backend)
-    led = runner.run()
+    sc = get("engine_smoke")
+    led = run(sc, driver="engine")
     for rec in led.records:
         kind = "COLD" if rec.cold else "warm"
         detail = f"  {rec.startup!r}" if rec.cold else ""
         print(f"[{rec.arrival:7.1f}s] {rec.function:6s} {kind} "
               f"latency={rec.latency * 1e3:8.1f}ms{detail}")
-    print(format_summary("real-fleet", led.summary()))
+    print(format_summary("real-fleet", summarize(sc, led)))
 
 
 def main():

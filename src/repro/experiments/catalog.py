@@ -1,0 +1,247 @@
+"""The taxonomy grid as named scenarios and sweeps.
+
+Every cell the benchmarks and examples used to hand-assemble is declared
+here once: workload spec x policy suite x platform profile x cluster
+shape.  Benchmarks (``bench_csf``, ``bench_qos``, ``bench_platforms``,
+``bench_tradeoffs``, ``bench_tiers``, ``bench_fleet``) and examples
+(``coldstart_study``, ``fleet_demo``) are thin declarations over this
+registry; the CLI (``python -m repro.experiments``) runs any of it with
+zero new plumbing.
+
+Seed policy: workloads whose numbers back a tuned acceptance gate pin
+their historical trace seed explicitly; everything else derives its trace
+seed from ``Scenario.seed`` (one master seed per scenario).  The shared
+``azure_long`` workload replaces the formerly-divergent hardcoded seeds of
+``bench_tradeoffs`` (31) and ``bench_platforms`` (41) with one derived
+stream — the same trace now underlies both studies.
+"""
+from __future__ import annotations
+
+from repro.experiments.registry import register, register_sweep
+from repro.experiments.spec import (ClusterSpec, EngineSpec, Scenario,
+                                    WorkloadSpec)
+from repro.experiments.sweep import AxisValue, Sweep
+
+
+def _w(generator: str, name=None, seed=None, **params) -> WorkloadSpec:
+    return WorkloadSpec(generator, params, seed=seed, name=name)
+
+
+# --------------------------------------------------------------------------- #
+# workload specs (the trace column of the grid)
+# --------------------------------------------------------------------------- #
+AZURE_TAXONOMY = _w("azure_like", "azure", seed=11, horizon=900.0,
+                    num_functions=25)
+BURSTY = _w("bursty", seed=12, base_rate=0.05, burst_rate=8.0, horizon=600.0,
+            num_functions=4)
+DIURNAL = _w("diurnal", seed=13, peak_rate=2.0, horizon=900.0, period=300.0,
+             num_functions=4)
+RARE_CSF = _w("rare", seed=14, inter_arrival=130.0, horizon=2000.0,
+              num_functions=4)
+AZURE_LONG = _w("azure_like", "azure_long", horizon=900.0, num_functions=20)
+AZURE_FLEET = _w("azure_like", "azure_like", seed=11, horizon=600.0,
+                 num_functions=20)
+FLASH_CROWD = _w("flash_crowd", seed=1, base_rate=0.5, spike_rate=40.0,
+                 horizon=300.0, num_functions=4)
+RARE_TIERS = _w("rare", "rare", seed=5, inter_arrival=150.0, horizon=30000.0,
+                jitter=0.3, num_functions=4)
+POISSON_QOS = _w("poisson", seed=21, rate=0.2, horizon=1500.0,
+                 num_functions=5)
+AZURE_CALIB = _w("azure_like", "azure_calib", seed=7, horizon=300.0,
+                 num_functions=12)
+AZURE_STUDY = _w("azure_like", "azure_study", seed=0, horizon=900.0,
+                 num_functions=25)
+CHAINS3 = _w("chains", seed=1, rate=0.05, horizon=600.0, chain_len=3)
+RARE_ENGINE = _w("rare", "rare_engine", seed=3, inter_arrival=120.0,
+                 horizon=600.0, jitter=0.05, num_functions=1)
+FLASH_CONC4 = _w("flash_crowd", "flash_conc4", seed=1, base_rate=0.5,
+                 spike_rate=30.0, horizon=120.0, num_functions=2,
+                 container_concurrency=4)
+POISSON_HET = _w("poisson", "poisson_het", seed=3, rate=2.0, horizon=200.0,
+                 num_functions=6)
+
+SMALL_CLUSTER = ClusterSpec(num_workers=2, worker_memory_mb=4096.0)
+CALIB_CLUSTER = ClusterSpec(num_workers=2, worker_memory_mb=8192.0)
+
+# --------------------------------------------------------------------------- #
+# base scenarios
+# --------------------------------------------------------------------------- #
+CSF = register(Scenario(
+    name="csf", workload=AZURE_TAXONOMY, policy="provider_default",
+    calibrated=True,
+    description="Table 5 base: CSF techniques on the taxonomy traces"))
+
+QOS = register(Scenario(
+    name="qos", workload=POISSON_QOS, policy="provider_short",
+    slo_latency_s=0.5,
+    description="RQ1/Fig.11 base: cold-start impact on QoS parameters"))
+
+PLATFORMS = register(Scenario(
+    name="platforms", workload=AZURE_LONG, policy="platform_default",
+    platform="aws_lambda",
+    description="RQ4/S5.4 base: one workload across platform profiles"))
+
+TRADEOFFS = register(Scenario(
+    name="tradeoffs", workload=AZURE_LONG, policy="provider_short",
+    description="S6 base: frequency-vs-waste Pareto + predictor study"))
+
+TIERS = register(Scenario(
+    name="tiers", workload=AZURE_FLEET, policy="tiered_spes",
+    description="Warmth-tier ladder base: graded vs binary keep-alive"))
+
+FLEET = register(Scenario(
+    name="fleet", workload=AZURE_FLEET, policy="provider_default",
+    calibrated=True,
+    description="Fleet replay base: policy comparison on the live twin"))
+
+STUDY = register(Scenario(
+    name="study", workload=AZURE_STUDY, policy="provider_default",
+    description="coldstart_study base: full catalog on an Azure-like mix"))
+
+register(Scenario(
+    name="study_chains", workload=CHAINS3, policy="provider_short",
+    description="3-stage chain workload (fusion / cascading cold starts)"))
+
+register(Scenario(
+    name="engine_smoke", workload=RARE_ENGINE, policy="prewarm_histogram",
+    keepalive_ttl=20.0, cluster=ClusterSpec(num_workers=1,
+                                            worker_memory_mb=4096.0),
+    engine=EngineSpec(arch="xlstm-125m", max_seq=16, batch=1, decode_steps=2,
+                      clock_speed=60.0, snapshots=True),
+    description="real engines on a 60x wall clock: sparse trace where every"
+                " hit is cold unless the histogram prewarm restores in time"))
+
+# fleet-only levers on a constrained cluster (the spike must queue)
+for label, cluster in [
+        ("serial", SMALL_CLUSTER),
+        ("batch8", ClusterSpec(num_workers=2, worker_memory_mb=4096.0,
+                               max_batch=8)),
+        ("slots4", ClusterSpec(num_workers=2, worker_memory_mb=4096.0,
+                               slots_per_replica=4))]:
+    register(Scenario(
+        name=f"fleet_levers/{label}", workload=FLASH_CROWD,
+        policy="provider_default", cluster=cluster, calibrated=True,
+        description="fleet-only lever under a queue-forcing flash crowd"))
+
+# sim-vs-fleet calibration cells (ledger-identity checked via compare())
+CALIBRATION = {}
+for label, sc in [
+    ("default", Scenario(
+        name="calib/default", workload=AZURE_FLEET,
+        policy="provider_default", calibrated=True,
+        description="baseline sim-vs-fleet ledger-identity cell")),
+    ("concurrency4", Scenario(
+        name="calib/concurrency4", workload=FLASH_CONC4,
+        policy="provider_default", cluster=SMALL_CLUSTER, calibrated=True,
+        description="container_concurrency=4 slot-sharing identity cell")),
+    ("heterogeneous", Scenario(
+        name="calib/heterogeneous", workload=POISSON_HET,
+        policy="provider_default", calibrated=True,
+        cluster=ClusterSpec(num_workers=3,
+                            worker_memory_mb=(8192.0, 4096.0, 2048.0),
+                            worker_speed=(1.0, 0.5, 2.0)),
+        description="heterogeneous-worker identity cell")),
+    ("tiered_fixed", Scenario(
+        name="calib/tiered_fixed", workload=AZURE_CALIB,
+        policy="tiered_fixed", cluster=CALIB_CLUSTER, calibrated=True,
+        description="static warmth-ladder identity cell")),
+    ("tiered_spes", Scenario(
+        name="calib/tiered_spes", workload=AZURE_CALIB,
+        policy="tiered_spes", cluster=CALIB_CLUSTER, calibrated=True,
+        description="SPES-style predictive-ladder identity cell "
+                    "(the CI ledger-identity smoke scenario)")),
+    ("pause_pool", Scenario(
+        name="calib/pause_pool", workload=AZURE_CALIB,
+        policy="pause_pool", cluster=CALIB_CLUSTER, calibrated=True,
+        description="generic pause-pool identity cell")),
+]:
+    CALIBRATION[label] = register(sc)
+
+# --------------------------------------------------------------------------- #
+# sweeps (the grids the benchmark tables iterate)
+# --------------------------------------------------------------------------- #
+CSF_POLICIES = ("cold_always", "provider_default", "faascache", "lcs",
+                "periodic_ping", "prewarm_ewma", "prewarm_markov",
+                "prewarm_histogram", "rl_keepalive", "cas", "ensure",
+                "hybrid_prewarm", "beyond_combo")
+
+register_sweep(Sweep(
+    name="csf_table5", base=CSF,
+    axes={"workload": (AZURE_TAXONOMY, BURSTY, DIURNAL, RARE_CSF),
+          "policy": CSF_POLICIES},
+    description="Table 5: CSF techniques x four trace families"))
+
+register_sweep(Sweep(
+    name="qos_fig11", base=QOS,
+    axes={"policy": (
+        AxisValue("with_cold_starts", {"policy": "provider_short"}),
+        AxisValue("cold_eliminated", {"policy": "periodic_ping"}),
+        AxisValue("always_cold", {"policy": "cold_always"}))},
+    description="Fig.11: QoS with / without / all cold starts"))
+
+def _platform_axis():
+    from repro.core.costmodel import PLATFORM_PROFILES
+    return tuple(PLATFORM_PROFILES)
+
+
+register_sweep(Sweep(
+    name="platforms_rq4", base=PLATFORMS,
+    axes={"platform": _platform_axis(),
+          "policy": (AxisValue("default", {"policy": "platform_default"}),
+                     AxisValue("snapshot", {"policy": "snapshot_restore"}))},
+    description="RQ4: per-platform cold-start fingerprint + snapshot fix"))
+
+register_sweep(Sweep(
+    name="tradeoffs_pareto", base=TRADEOFFS,
+    axes={"policy": ("cold_always", "provider_short", "provider_default",
+                     "periodic_ping", "prewarm_histogram", "faascache",
+                     "beyond_combo")},
+    description="S6.1: cold-start frequency vs wasted GB-s Pareto"))
+
+TIERS_BINARY = ("provider_short", "provider_default")
+TIERS_GRADED = ("tiered_fixed", "tiered_spes", "tiered_rl")
+
+register_sweep(Sweep(
+    name="tiers_pareto", base=TIERS,
+    axes={"workload": (AZURE_FLEET, RARE_TIERS),
+          "policy": TIERS_BINARY + TIERS_GRADED},
+    description="graded warmth ladders vs binary fixed-TTL keep-alive"))
+
+FLEET_POLICY_AXIS = (
+    AxisValue("fixed_ttl_60", {"policy": "provider_short"}),
+    AxisValue("fixed_ttl_600", {"policy": "provider_default"}),
+    AxisValue("histogram_prewarm", {"policy": "prewarm_histogram",
+                                    "keepalive_ttl": 50.0}),
+    AxisValue("hybrid_prewarm", {"policy": "hybrid_prewarm",
+                                 "keepalive_ttl": 50.0}),
+    AxisValue("rl_keepalive", {"policy": "rl_keepalive"}),
+)
+
+register_sweep(Sweep(
+    name="fleet_policies", base=FLEET, driver="fleet",
+    axes={"workload": (AZURE_FLEET, FLASH_CROWD),
+          "policy": FLEET_POLICY_AXIS},
+    description="fleet replay: fixed TTL vs predictor-driven autoscaling"))
+
+register_sweep(Sweep(
+    name="fleet_demo", base=FLEET, driver="fleet",
+    axes={"policy": (FLEET_POLICY_AXIS[0], FLEET_POLICY_AXIS[1],
+                     FLEET_POLICY_AXIS[3], FLEET_POLICY_AXIS[4])},
+    description="fleet_demo example: four policies on the azure trace"))
+
+
+def study_sweep():
+    """The full-catalog policy sweep for examples/coldstart_study.py.
+
+    Built lazily (the policy CATALOG import is cheap but keeps this module
+    import-light); skips prewarm_lstm — per-step jax on CPU is too slow
+    for an example run.
+    """
+    from repro.core.policies import CATALOG
+    return Sweep(
+        name="study_catalog", base=STUDY,
+        axes={"policy": tuple(n for n in CATALOG if n != "prewarm_lstm")},
+        description="every catalog suite on the study workload")
+
+
+register_sweep(study_sweep())

@@ -1,0 +1,158 @@
+"""CLI over the scenario registry: list / run / sweep.
+
+    python -m repro.experiments list [--json]
+    python -m repro.experiments run NAME [--driver sim|fleet|engine]...
+                                   [--json PATH] [--require-identical]
+    python -m repro.experiments sweep NAME [--driver D]
+                                   [--axis FIELD=V1,V2,...]...
+                                   [--json PATH]
+
+``run`` with several ``--driver`` flags replays the SAME scenario through
+each driver and prints the ledger diff; ``--require-identical`` exits
+nonzero on any drift (the CI calibration smoke).  ``sweep`` runs a
+registered grid, or an ad-hoc one built from ``--axis`` overrides on a
+base scenario.  ``--json`` writes machine-readable rows that
+``scripts/make_experiments_tables.py scenarios`` renders as a table.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import List, Optional
+
+from repro.core.metrics import format_summary
+from repro.experiments import registry, runner
+from repro.experiments.spec import Scenario
+from repro.experiments.sweep import Sweep
+
+
+def _parse_axis(text: str):
+    """``field=v1,v2,...`` with JSON-typed values (fallback: string)."""
+    if "=" not in text:
+        raise argparse.ArgumentTypeError(
+            f"--axis wants FIELD=V1,V2,... got {text!r}")
+    field, _, raw = text.partition("=")
+    values = []
+    for tok in raw.split(","):
+        try:
+            values.append(json.loads(tok))
+        except json.JSONDecodeError:
+            values.append(tok)
+    return field, tuple(values)
+
+
+def _write_json(path: str, rows) -> None:
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=1)
+
+
+def _row(sc: Scenario, driver: str, summary) -> dict:
+    return {"scenario": sc.to_dict(), "driver": driver, "summary": summary}
+
+
+def _cmd_list(args) -> int:
+    if args.json:
+        _write_json(args.json, {
+            "scenarios": [registry.get(n).to_dict()
+                          for n in registry.names()],
+            "sweeps": [{"name": n,
+                        "cells": len(registry.get_sweep(n)),
+                        "driver": registry.get_sweep(n).driver,
+                        "description": registry.get_sweep(n).description}
+                       for n in registry.sweep_names()],
+        })
+        return 0
+    print("scenarios:")
+    for name in registry.names():
+        sc = registry.get(name)
+        print(f"  {name:24s} [{sc.policy:18s}] {sc.description}")
+    print("sweeps:")
+    for name in registry.sweep_names():
+        sw = registry.get_sweep(name)
+        print(f"  {name:24s} [{len(sw):3d} cells, driver={sw.driver}] "
+              f"{sw.description}")
+    return 0
+
+
+def _cmd_run(args) -> int:
+    sc = registry.get(args.name)
+    drivers = args.driver or ["sim"]
+    rows, ledgers = [], {}
+    for drv in drivers:
+        led = runner.run(sc, drv)
+        ledgers[drv] = led
+        s = runner.summarize(sc, led)
+        rows.append(_row(sc, drv, s))
+        print(format_summary(f"{sc.name}[{drv}]", s))
+    rc = 0
+    if len(drivers) >= 2:
+        base = drivers[0]
+        for drv in drivers[1:]:
+            diff = runner.compare(ledgers[base], ledgers[drv])
+            print(f"compare {base} vs {drv}: {diff}")
+            rows.append({"scenario": sc.to_dict(),
+                         "compare": [base, drv],
+                         "identical": diff.identical,
+                         "drift": diff.drift()})
+            if args.require_identical and not diff.identical:
+                rc = 1
+    elif args.require_identical:
+        print("--require-identical needs at least two --driver flags",
+              file=sys.stderr)
+        rc = 2
+    if args.json:
+        _write_json(args.json, rows)
+    return rc
+
+
+def _cmd_sweep(args) -> int:
+    if args.axis:
+        base = registry.get(args.name)
+        sweep = Sweep(name=f"{args.name}-adhoc", base=base,
+                      axes=dict(args.axis))
+    else:
+        sweep = registry.get_sweep(args.name)
+    rows = []
+    for driver in (args.driver or [None]):
+        for sc, s in runner.run_sweep(sweep, driver):
+            rows.append(_row(sc, driver or sweep.driver, s))
+            print(format_summary(f"{sc.name}[{driver or sweep.driver}]", s))
+    if args.json:
+        _write_json(args.json, rows)
+    return 0
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.experiments",
+        description="run taxonomy-grid scenarios and sweeps")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    p_list = sub.add_parser("list", help="list registered scenarios/sweeps")
+    p_list.add_argument("--json", metavar="PATH")
+
+    p_run = sub.add_parser("run", help="run one scenario on 1+ drivers")
+    p_run.add_argument("name")
+    p_run.add_argument("--driver", action="append",
+                       choices=runner.DRIVERS,
+                       help="repeatable; 2+ drivers also prints the diff")
+    p_run.add_argument("--json", metavar="PATH")
+    p_run.add_argument("--require-identical", action="store_true",
+                       help="exit 1 unless all drivers' ledgers match")
+
+    p_sw = sub.add_parser("sweep", help="run a registered or ad-hoc grid")
+    p_sw.add_argument("name", help="sweep name (or scenario name w/ --axis)")
+    p_sw.add_argument("--driver", action="append", choices=runner.DRIVERS)
+    p_sw.add_argument("--axis", action="append", type=_parse_axis,
+                      metavar="FIELD=V1,V2,...",
+                      help="ad-hoc axis over a base *scenario*; repeatable")
+    p_sw.add_argument("--json", metavar="PATH")
+
+    args = ap.parse_args(argv)
+    try:
+        return {"list": _cmd_list, "run": _cmd_run,
+                "sweep": _cmd_sweep}[args.cmd](args)
+    except registry.UnknownScenarioError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2

@@ -1,0 +1,173 @@
+"""One entry point for every taxonomy cell: ``run(scenario, driver=...)``.
+
+Drivers:
+  sim     discrete-event simulator (``core/simulator.py``) — cost-model
+          time, fully deterministic;
+  fleet   concurrent fleet on a virtual clock (``fleet/loadgen.py``) —
+          frontend queues, autoscaler, micro-batching, modeled backend;
+  engine  the fleet loop on a scaled wall clock with REAL JAX engines
+          (``serving`` backend): cold starts pay genuine XLA compiles.
+
+All three return the same :class:`~repro.core.metrics.QoSLedger` schema,
+and :func:`compare` turns two ledgers into a field-for-field diff — the
+sim-vs-fleet ledger-identity gate as a library call.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+from dataclasses import dataclass
+from typing import Dict, Iterator, List, Optional, Tuple, Union
+
+from repro.core.metrics import QoSLedger
+from repro.experiments import registry
+from repro.experiments.spec import Scenario
+from repro.experiments.sweep import Sweep
+
+DRIVERS = ("sim", "fleet", "engine")
+
+# traces are deterministic in (workload spec, derived seed), so scenario
+# grids that share a workload reuse one build instead of regenerating it
+# per policy point (the drivers never mutate a Trace)
+_TRACE_CACHE: Dict[str, object] = {}
+_TRACE_CACHE_MAX = 32
+
+
+def build_trace(scenario: Scenario):
+    key = json.dumps({"w": scenario.workload.to_dict(),
+                      "seed": scenario.seed}, sort_keys=True)
+    if key not in _TRACE_CACHE:
+        if len(_TRACE_CACHE) >= _TRACE_CACHE_MAX:
+            _TRACE_CACHE.pop(next(iter(_TRACE_CACHE)))
+        _TRACE_CACHE[key] = scenario.trace()
+    return _TRACE_CACHE[key]
+
+
+def run(scenario: Union[str, Scenario], driver: str = "sim", *,
+        cost_model=None) -> QoSLedger:
+    """Run one scenario under one driver; returns its QoS ledger."""
+    sc = registry.resolve(scenario)
+    if driver not in DRIVERS:
+        raise ValueError(f"unknown driver {driver!r}; one of {DRIVERS}")
+    cm = cost_model if cost_model is not None else sc.cost_model()
+    trace = build_trace(sc)
+    if driver == "sim":
+        from repro.core.simulator import simulate
+        return simulate(trace, sc.suite(), cost_model=cm,
+                        cfg=sc.sim_config())
+    if driver == "fleet":
+        from repro.fleet import replay
+        return replay(trace, sc.suite(), cost_model=cm,
+                      cfg=sc.fleet_config())
+    return _run_engine(sc, trace, cm)
+
+
+def _run_engine(sc: Scenario, trace, cost_model) -> QoSLedger:
+    """Real engines on a scaled wall clock (imports jax lazily)."""
+    from repro.fleet import (EngineBackend, EngineProfile, FleetRunner,
+                             WallClock)
+    from repro.serving.engine import SnapshotStore
+
+    es = sc.engine
+    store = SnapshotStore() if es.snapshots else None
+    backend = EngineBackend(store=store, profiles={
+        name: EngineProfile(arch=es.arch, max_seq=es.max_seq,
+                            batch=es.batch, decode_steps=es.decode_steps)
+        for name in trace.functions
+    })
+    suite = sc.suite()
+    if es.snapshots:
+        suite.startup = dataclasses.replace(suite.startup, snapshot=True)
+    runner = FleetRunner(trace, suite, cost_model=cost_model,
+                         cfg=sc.fleet_config(),
+                         clock=WallClock(speed=es.clock_speed),
+                         backend=backend)
+    return runner.run()
+
+
+def summarize(scenario: Union[str, Scenario],
+              ledger: QoSLedger) -> Dict[str, float]:
+    """Ledger summary with the scenario's SLA threshold applied."""
+    sc = registry.resolve(scenario)
+    return ledger.summary(sla_latency_s=sc.slo_latency_s)
+
+
+def run_summary(scenario: Union[str, Scenario], driver: str = "sim", *,
+                cost_model=None) -> Dict[str, float]:
+    sc = registry.resolve(scenario)
+    return summarize(sc, run(sc, driver, cost_model=cost_model))
+
+
+def run_sweep(sweep: Union[str, Sweep], driver: Optional[str] = None, *,
+              cost_model=None) -> Iterator[Tuple[Scenario, Dict[str, float]]]:
+    """Yield ``(scenario, summary)`` for every cell of a sweep grid."""
+    sw = registry.resolve_sweep(sweep)
+    drv = driver or sw.driver
+    for sc in sw.scenarios():
+        yield sc, run_summary(sc, drv, cost_model=cost_model)
+
+
+# --------------------------------------------------------------------------- #
+# the ledger diff: sim-vs-fleet identity as a library call
+# --------------------------------------------------------------------------- #
+_MISSING = "<missing>"        # a field absent from one summary is never
+                              # "same" — schema divergence counts as drift
+
+
+@dataclass(frozen=True)
+class FieldDiff:
+    a: float
+    b: float
+
+    @property
+    def same(self) -> bool:
+        if _MISSING in (self.a, self.b):
+            return False
+        if isinstance(self.a, float) and isinstance(self.b, float) \
+                and math.isnan(self.a) and math.isnan(self.b):
+            return True
+        return self.a == self.b
+
+    @property
+    def delta(self) -> float:
+        try:
+            return self.b - self.a
+        except TypeError:
+            return float("nan")
+
+
+@dataclass(frozen=True)
+class LedgerDiff:
+    fields: Dict[str, FieldDiff]
+
+    @property
+    def identical(self) -> bool:
+        return all(f.same for f in self.fields.values())
+
+    def drift(self) -> List[str]:
+        """Names of fields that differ."""
+        return [k for k, f in self.fields.items() if not f.same]
+
+    def __str__(self) -> str:
+        if self.identical:
+            return f"identical ({len(self.fields)} fields)"
+        rows = [f"  {k}: {f.a!r} != {f.b!r} (delta {f.delta:+.6g})"
+                for k, f in self.fields.items() if not f.same]
+        return "ledger drift in {} of {} fields:\n{}".format(
+            len(rows), len(self.fields), "\n".join(rows))
+
+
+def compare(a: Union[QoSLedger, Dict[str, float]],
+            b: Union[QoSLedger, Dict[str, float]]) -> LedgerDiff:
+    """Field-for-field diff of two ledgers (or summary dicts).
+
+    ``compare(run(sc, "sim"), run(sc, "fleet")).identical`` is the
+    sim-vs-fleet calibration gate; NaN == NaN (empty percentile fields),
+    but a key present on only one side is always drift (schema check).
+    """
+    sa = a.summary() if isinstance(a, QoSLedger) else dict(a)
+    sb = b.summary() if isinstance(b, QoSLedger) else dict(b)
+    keys = sorted(set(sa) | set(sb))
+    return LedgerDiff({k: FieldDiff(sa.get(k, _MISSING), sb.get(k, _MISSING))
+                       for k in keys})

@@ -1,0 +1,223 @@
+"""Scenario API tests: spec round-tripping, registry did-you-mean lookup,
+sweep cartesian products, one-master-seed determinism, the compare()
+ledger-identity gate, and the CLI."""
+import json
+import math
+
+import pytest
+
+from repro.experiments import (AxisValue, ClusterSpec, Scenario, Sweep,
+                               UnknownScenarioError, WorkloadSpec, compare,
+                               derive_seed, get, get_sweep, names, run,
+                               run_summary, run_sweep, sweep_names)
+from repro.experiments.cli import main as cli_main
+
+SMALL = Scenario(
+    name="t/small",
+    workload=WorkloadSpec("poisson", {"rate": 1.0, "horizon": 60.0,
+                                      "num_functions": 3}),
+    policy="provider_short",
+    cluster=ClusterSpec(num_workers=2, worker_memory_mb=4096.0),
+    seed=7)
+
+
+# --------------------------------------------------------------------------- #
+# serialization round-trip
+# --------------------------------------------------------------------------- #
+def test_scenario_round_trips_through_json():
+    sc = Scenario(
+        name="t/rt",
+        workload=WorkloadSpec("azure_like", {"horizon": 300.0,
+                                             "num_functions": 12},
+                              seed=7, name="azure_rt"),
+        policy="tiered_spes", keepalive_ttl=50.0, platform="azure",
+        cluster=ClusterSpec(num_workers=3,
+                            worker_memory_mb=(8192.0, 4096.0, 2048.0),
+                            worker_speed=(1.0, 0.5, 2.0),
+                            slots_per_replica=4, max_batch=8,
+                            admission_slo_s=1.5),
+        slo_latency_s=0.5, calibrated=True, seed=3,
+        description="round-trip fixture")
+    wire = json.loads(json.dumps(sc.to_dict()))   # lists, no tuples
+    assert Scenario.from_dict(wire) == sc
+
+
+def test_every_registered_scenario_round_trips():
+    for name in names():
+        sc = get(name)
+        assert Scenario.from_dict(
+            json.loads(json.dumps(sc.to_dict()))) == sc
+
+
+# --------------------------------------------------------------------------- #
+# registry lookup
+# --------------------------------------------------------------------------- #
+def test_unknown_scenario_raises_with_did_you_mean():
+    with pytest.raises(UnknownScenarioError, match="did you mean"):
+        get("calib/tiered_sbes")
+    with pytest.raises(UnknownScenarioError, match="'csf_table5'"):
+        get_sweep("csf_table_5")
+
+
+def test_known_names_resolve():
+    assert "calib/tiered_spes" in names()
+    assert "csf_table5" in sweep_names()
+    assert get("csf").policy == "provider_default"
+
+
+# --------------------------------------------------------------------------- #
+# sweeps
+# --------------------------------------------------------------------------- #
+def test_sweep_two_axes_yields_full_cartesian_product():
+    w1 = WorkloadSpec("poisson", {"rate": 1.0, "horizon": 10.0}, name="a")
+    w2 = WorkloadSpec("bursty", {"base_rate": 0.1, "burst_rate": 2.0,
+                                 "horizon": 10.0}, name="b")
+    sw = Sweep(name="t/grid", base=SMALL,
+               axes={"workload": (w1, w2),
+                     "policy": ("cold_always", "provider_short", "lcs")})
+    cells = sw.scenarios()
+    assert len(sw) == len(cells) == 2 * 3
+    combos = {(sc.workload.label, sc.policy) for sc in cells}
+    assert combos == {(w, p) for w in ("a", "b")
+                      for p in ("cold_always", "provider_short", "lcs")}
+    assert len({sc.name for sc in cells}) == 6     # unique cell names
+    assert cells[0].name == "t/small/a/cold_always"
+
+
+def test_axis_value_moves_multiple_fields():
+    sw = Sweep(name="t/av", base=SMALL,
+               axes={"policy": (
+                   AxisValue("hybrid50", {"policy": "hybrid_prewarm",
+                                          "keepalive_ttl": 50.0}),)})
+    (sc,) = sw.scenarios()
+    assert sc.policy == "hybrid_prewarm" and sc.keepalive_ttl == 50.0
+    assert sc.name.endswith("/hybrid50")
+
+
+def test_with_overrides_rejects_unknown_field():
+    with pytest.raises(AttributeError, match="no field"):
+        SMALL.with_overrides({"cluster.num_wrokers": 8})
+
+
+def test_with_overrides_reaches_nested_workload_params():
+    sc = SMALL.with_overrides({"workload.params.num_functions": 9})
+    assert sc.workload.params["num_functions"] == 9
+    assert SMALL.workload.params["num_functions"] == 3   # original untouched
+
+
+# --------------------------------------------------------------------------- #
+# seeds: one master, derived components, bit-identical reruns
+# --------------------------------------------------------------------------- #
+def test_derived_seeds_are_stable_and_distinct_per_component():
+    assert derive_seed(7, "trace:x") == derive_seed(7, "trace:x")
+    assert derive_seed(7, "trace:x") != derive_seed(7, "loadgen")
+    assert derive_seed(7, "trace:x") != derive_seed(8, "trace:x")
+    assert SMALL.seed_for("loadgen") == SMALL.fleet_config().seed
+
+
+def test_same_scenario_is_bit_identical_across_runs():
+    a = run_summary(SMALL, "sim")
+    b = run_summary(SMALL, "sim")
+    assert compare(a, b).identical
+
+
+def test_master_seed_moves_the_derived_trace():
+    t7 = SMALL.trace()
+    t8 = SMALL.with_overrides({"seed": 8}).trace()
+    assert [i.time for i in t7.invocations] != [i.time for i in t8.invocations]
+
+
+def test_explicit_workload_seed_pins_the_trace():
+    pinned = SMALL.with_overrides({"workload.seed": 11})
+    t_a = pinned.trace()
+    t_b = pinned.with_overrides({"seed": 99}).trace()
+    assert [i.time for i in t_a.invocations] == \
+        [i.time for i in t_b.invocations]
+
+
+# --------------------------------------------------------------------------- #
+# compare(): the sim-vs-fleet ledger-identity gate as a library call
+# --------------------------------------------------------------------------- #
+def test_compare_sim_vs_fleet_identity_on_small_scenario():
+    diff = compare(run(SMALL, "sim"), run(SMALL, "fleet"))
+    assert diff.identical, str(diff)
+    assert diff.drift() == []
+
+
+def test_compare_reports_drift_fields():
+    s = run_summary(SMALL, "sim")
+    perturbed = dict(s)
+    perturbed["idle_gb_s"] += 1.0
+    diff = compare(s, perturbed)
+    assert not diff.identical
+    assert diff.drift() == ["idle_gb_s"]
+    assert "idle_gb_s" in str(diff)
+    nan_ok = compare({"x": float("nan")}, {"x": float("nan")})
+    assert nan_ok.identical
+
+
+def test_compare_flags_schema_divergence():
+    # a key present on only one side is drift even when the other value
+    # is NaN — sim/fleet summary schemas must match exactly
+    diff = compare({"x": 1.0, "y": float("nan")}, {"x": 1.0})
+    assert not diff.identical
+    assert diff.drift() == ["y"]
+
+
+def test_run_rejects_unknown_driver():
+    with pytest.raises(ValueError, match="unknown driver"):
+        run(SMALL, "warp")
+
+
+def test_run_sweep_yields_scenario_summary_pairs():
+    sw = Sweep(name="t/rs", base=SMALL,
+               axes={"policy": ("cold_always", "provider_short")})
+    rows = list(run_sweep(sw))
+    assert [sc.policy for sc, _ in rows] == ["cold_always", "provider_short"]
+    for _, s in rows:
+        assert "latency_p95_s" in s and not math.isnan(s["latency_p95_s"])
+
+
+# --------------------------------------------------------------------------- #
+# CLI
+# --------------------------------------------------------------------------- #
+def test_cli_list_and_unknown_name(capsys):
+    assert cli_main(["list"]) == 0
+    out = capsys.readouterr().out
+    assert "calib/tiered_spes" in out and "csf_table5" in out
+    assert cli_main(["run", "no_such_scenario"]) == 2
+    assert "did you mean" in capsys.readouterr().err
+
+
+def test_cli_run_identity_smoke_writes_json(tmp_path, capsys):
+    out_json = tmp_path / "rows.json"
+    rc = cli_main(["run", "calib/concurrency4", "--driver", "sim",
+                   "--driver", "fleet", "--require-identical",
+                   "--json", str(out_json)])
+    assert rc == 0, capsys.readouterr().out
+    rows = json.loads(out_json.read_text())
+    drivers = [r["driver"] for r in rows if "driver" in r]
+    assert drivers == ["sim", "fleet"]
+    (cmp_row,) = [r for r in rows if "compare" in r]
+    assert cmp_row["identical"] is True
+
+    # the table renderer consumes the same JSON
+    import importlib.util
+    spec = importlib.util.spec_from_file_location(
+        "mk_tables", "scripts/make_experiments_tables.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    table = mod.scenario_table(rows)
+    assert "calib/concurrency4" in table and "identical" in table
+
+
+def test_cli_adhoc_sweep_axes(tmp_path):
+    out_json = tmp_path / "sweep.json"
+    rc = cli_main(["sweep", "qos", "--axis",
+                   "policy=cold_always,provider_short",
+                   "--axis", "seed=0,1", "--json", str(out_json)])
+    assert rc == 0
+    rows = json.loads(out_json.read_text())
+    assert len(rows) == 4                      # 2 x 2 cartesian product
+    seeds = {r["scenario"]["seed"] for r in rows}
+    assert seeds == {0, 1}

@@ -2,8 +2,6 @@
 billing, demotion schedules through both drivers, sim-vs-fleet ledger
 identity with PAUSED and SNAPSHOT_READY engaged, the O(log W) placement
 index, and the graded-vs-binary Pareto gate."""
-import math
-
 import pytest
 
 from repro.core.cluster import ClusterContext, ClusterState, PolicyDriver
@@ -28,13 +26,11 @@ def _fns(n=2, **kw):
 
 
 def _identical(sim_s, fleet_s):
+    # the library-call form of the gate (experiments.compare) IS the check
+    from repro.experiments import compare
     assert set(sim_s) == set(fleet_s)
-    for k in sim_s:
-        a, b = sim_s[k], fleet_s[k]
-        if isinstance(a, float) and math.isnan(a):
-            assert math.isnan(b), k
-        else:
-            assert a == b, (k, a, b)
+    diff = compare(sim_s, fleet_s)
+    assert diff.identical, str(diff)
 
 
 # --------------------------------------------------------------------------- #
