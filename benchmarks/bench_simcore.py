@@ -3,11 +3,24 @@ points).
 
 Replays an ``azure_like`` trace through ``core.simulator.simulate`` under the
 provider-default policy at increasing function counts and reports **events
-per second** (processed invocations / wall-clock).  The cluster is sized so
-(nearly) every function can stay warm: that makes the warm-container
-registry large, which is exactly the regime where per-arrival
-O(all-containers) scans drown the event loop and where the indexed
-``ClusterState`` kernel pays off.
+per second** — both invocations/wall (the historical headline number) and
+``heap_events_per_s`` (heap events actually popped / wall, via
+``Simulator.events_processed``), which is the true unit of simulator work:
+different scales schedule different expiry/demote event mixes, so
+invocations/s alone can dip for reasons that are workload shape, not a
+dispatch-path regression.  The cluster is sized so (nearly) every function
+can stay warm: that makes the warm-container registry large, which is
+exactly the regime where per-arrival O(all-containers) scans drown the
+event loop and where the indexed ``ClusterState`` kernel pays off.
+
+A cross-scale cliff gate flags any scale whose ``heap_events_per_s``
+falls below ``CLIFF_FRAC`` of the sweep's best: per-scale throughput is
+flat post-kernel (~uniform heap-events/invocation), so a one-scale
+collapse indicates an O(n) path, not noise.  (An earlier
+BENCH_simcore.json snapshot showed 500 fns at 4984 inv/s vs 8414/7353 at
+the neighbouring scales; re-measurement showed uniform ~4 heap
+events/invocation and flat heap-eps across scales — machine noise on one
+recording, no cliff.  The gate now guards exactly that signature.)
 
 Outputs:
   * ``emit("simcore/azure_like/<n>fns/events_per_s", ...)`` rows via
@@ -26,7 +39,7 @@ import sys
 import time
 
 from repro.core.policies import suite
-from repro.core.simulator import SimConfig, simulate
+from repro.core.simulator import SimConfig, Simulator
 from repro.core.workload import azure_like
 
 PLACEMENT_WORKERS = 2000     # worker count for the placement-index row
@@ -43,6 +56,12 @@ SMOKE_SCALE = (100, 45.0)
 # with wide machine-variance margin, not a tight bound.
 SMOKE_FLOOR_EPS = 2_000.0
 
+# cross-scale cliff gate: every scale's heap-events/s must reach this
+# fraction of the sweep's best.  Post-kernel the three scales measure
+# within ~±15% of each other; an O(n) dispatch path reintroduced at one
+# scale drops it by integer factors, far below 0.4x.
+CLIFF_FRAC = 0.4
+
 NUM_WORKERS = 8
 
 
@@ -55,17 +74,22 @@ def _cfg(num_functions: int) -> SimConfig:
 
 def _one(num_functions: int, horizon: float) -> dict:
     tr = azure_like(horizon, num_functions=num_functions, seed=11)
+    sim = Simulator(tr, suite("provider_default"), cfg=_cfg(num_functions))
     t0 = time.perf_counter()
-    led = simulate(tr, suite("provider_default"), cfg=_cfg(num_functions))
+    led = sim.run()
     wall = time.perf_counter() - t0
     n_inv = len(tr.invocations)
+    n_heap = sim.events_processed
     return {
         "functions": num_functions,
         "horizon_s": horizon,
         "invocations": n_inv,
         "records": len(led.records),
+        "heap_events": n_heap,
+        "heap_events_per_inv": n_heap / n_inv if n_inv else float("nan"),
         "wall_s": wall,
         "events_per_s": n_inv / wall if wall else float("inf"),
+        "heap_events_per_s": n_heap / wall if wall else float("inf"),
     }
 
 
@@ -110,6 +134,14 @@ def _placement_row(emit):
     return speedup
 
 
+def check_cliff(results, frac=CLIFF_FRAC):
+    """Scales whose heap-events/s collapse relative to the sweep's best."""
+    if len(results) < 2:
+        return []
+    best = max(r["heap_events_per_s"] for r in results)
+    return [r for r in results if r["heap_events_per_s"] < frac * best]
+
+
 def run(emit, *, scales=SCALES, json_path="BENCH_simcore.json"):
     results = []
     for n, horizon in scales:
@@ -118,6 +150,16 @@ def run(emit, *, scales=SCALES, json_path="BENCH_simcore.json"):
         emit(f"simcore/azure_like/{n}fns/events_per_s", r["events_per_s"],
              f"inv={r['invocations']} wall={r['wall_s']:.2f}s",
              units="per_s")
+        emit(f"simcore/azure_like/{n}fns/heap_events_per_s",
+             r["heap_events_per_s"],
+             f"heap={r['heap_events']} "
+             f"({r['heap_events_per_inv']:.2f}/inv)",
+             units="per_s")
+    for r in check_cliff(results):
+        print(f"WARNING: {r['functions']}-function scale runs at "
+              f"{r['heap_events_per_s']:.0f} heap-events/s, below "
+              f"{CLIFF_FRAC:.0%} of the sweep's best — per-scale cliff "
+              "(O(n) dispatch path?)", file=sys.stderr)
     _placement_row(emit)
     with open(json_path, "w") as f:
         json.dump(results, f, indent=2)
@@ -142,7 +184,11 @@ def main() -> int:
             return 1
         print(f"ok: {eps:.0f} events/s >= {SMOKE_FLOOR_EPS:.0f} floor")
         return 0
-    run(emit)
+    results = run(emit)
+    if check_cliff(results):
+        print(f"FAIL: per-scale throughput cliff (< {CLIFF_FRAC:.0%} of "
+              "best heap-events/s) — see warnings above")
+        return 1
     return 0
 
 

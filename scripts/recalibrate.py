@@ -1,0 +1,117 @@
+#!/usr/bin/env python
+"""Closed-loop cost-model recalibration from real engine runs.
+
+Runs the ``calib/engine_*`` probe scenarios under the real-engine driver
+(each startup event then carries *measured* phase seconds), inverts the
+measurements into CostModel parameters via ``repro.analyze.calibrate``,
+writes a ``CostModel.from_calibration``-compatible JSON, and prints the
+fidelity table (sim-predicted vs engine-measured startup per function and
+tier) before and after recalibration — the "after" column is the loop
+closing: predictions from the file the script just wrote.
+
+  PYTHONPATH=src python scripts/recalibrate.py --out calibration.json
+  PYTHONPATH=src python scripts/recalibrate.py --dry-run
+
+``--dry-run`` swaps the engine driver for the modeled fleet driver: no
+JAX, runs in seconds, and — because the "measurements" then come from
+the cost model itself — the after-fidelity error must be ~0.  CI uses it
+to prove the inversion is the exact inverse of the model.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.analyze.calibrate import (fidelity_report, format_fidelity,
+                                     measured_costs, write_calibration)
+from repro.core.costmodel import CostModel
+from repro.core.events import EventLog
+from repro.experiments import registry, runner
+
+DEFAULT_SCENARIOS = ("engine_smoke", "calib/engine_paused",
+                     "calib/engine_snapshot")
+
+
+def _max_abs_err(rows) -> float:
+    errs = [abs(r["rel_err"]) for r in rows if r["n"] > 0]
+    return max(errs) if errs else 0.0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--scenario", action="append", dest="scenarios",
+                    metavar="NAME",
+                    help="calibration scenario(s); default: "
+                         + ", ".join(DEFAULT_SCENARIOS))
+    ap.add_argument("--out", default="calibration.json",
+                    help="output JSON path (default: %(default)s)")
+    ap.add_argument("--events-dir", metavar="DIR",
+                    help="also dump each run's events.jsonl here")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="use the modeled fleet driver instead of real "
+                         "engines; write to a temp file unless --out is "
+                         "given explicitly")
+    args = ap.parse_args(argv)
+
+    driver = "fleet" if args.dry_run else "engine"
+    base = CostModel()
+    all_events = []
+    functions = {}
+    for name in args.scenarios or DEFAULT_SCENARIOS:
+        sc = registry.resolve(name)
+        log = EventLog()
+        print(f"running {sc.name} under driver={driver} ...",
+              file=sys.stderr)
+        runner.run(sc, driver, cost_model=base, events=log)
+        n_startups = sum(1 for e in log.events if e["kind"] == "startup")
+        print(f"  {len(log.events)} events, {n_startups} startups",
+              file=sys.stderr)
+        if args.events_dir:
+            os.makedirs(args.events_dir, exist_ok=True)
+            log.write_jsonl(os.path.join(
+                args.events_dir, sc.name.replace("/", "_") + ".jsonl"))
+        all_events.extend(log.events)
+        functions.update(runner.build_trace(sc).functions)
+
+    calib = measured_costs(all_events, functions, base)
+    print()
+    print(format_fidelity(fidelity_report(all_events, functions, base),
+                          title="before (defaults)"))
+
+    out_path = args.out
+    explicit_out = any(a.startswith("--out") or a == "-o"
+                       for a in (argv if argv is not None else sys.argv[1:]))
+    if args.dry_run and not explicit_out:
+        fd, out_path = tempfile.mkstemp(suffix=".json",
+                                        prefix="calibration-dryrun-")
+        os.close(fd)
+    write_calibration(out_path, calib)
+    # close the loop: predictions below come from re-reading the file
+    recal = CostModel.from_calibration(out_path)
+    after = fidelity_report(all_events, functions, recal)
+    print()
+    print(format_fidelity(after, title=f"after ({out_path})"))
+    print()
+    print("calibration:",
+          json.dumps({k: v for k, v in calib.items() if k != "_meta"},
+                     sort_keys=True))
+    err = _max_abs_err(after)
+    print(f"max |rel_err| after recalibration: {err * 100:.2f}%")
+    if args.dry_run:
+        # modeled measurements must invert exactly (modulo promote paths
+        # the probes never exercised)
+        ok = err < 0.01
+        print("dry-run closed-loop check:", "PASS" if ok else "FAIL")
+        if not explicit_out:
+            os.unlink(out_path)
+        return 0 if ok else 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -53,6 +53,7 @@ from collections import defaultdict
 from typing import (Callable, Dict, List, Optional, Sequence, Tuple, Union)
 
 from repro.core.costmodel import TIER_FOOTPRINT_FRAC, CostModel
+from repro.core.events import EventLog
 from repro.core.lifecycle import (RESIDENT_IDLE_STATES, STATE_TO_TIER,
                                   TIER_TO_STATE, Breakdown, Container,
                                   ContainerState, FunctionSpec, WarmthTier)
@@ -155,7 +156,8 @@ class ClusterState:
                  on_demote: Optional[
                      Callable[[Container, WarmthTier], None]] = None,
                  tier_footprint_frac: Optional[
-                     Dict[WarmthTier, float]] = None):
+                     Dict[WarmthTier, float]] = None,
+                 events: Optional[EventLog] = None):
         self.functions = functions
         self.num_workers = num_workers
         self.worker_memory = _per_worker(worker_memory_mb, num_workers,
@@ -169,6 +171,7 @@ class ClusterState:
         self.tier_footprint_frac = (dict(TIER_FOOTPRINT_FRAC)
                                     if tier_footprint_frac is None
                                     else dict(tier_footprint_frac))
+        self.events = events
         self.now = 0.0
 
         self.containers: Dict[int, Container] = {}
@@ -373,8 +376,12 @@ class ClusterState:
         return WarmthTier.DEAD
 
     def admit(self, function: str, worker: int, now: float, *,
-              has_snapshot: bool = False) -> Container:
-        """Place a new PROVISIONING container on ``worker`` (cold start)."""
+              has_snapshot: bool = False,
+              tier: Optional[WarmthTier] = None) -> Container:
+        """Place a new PROVISIONING container on ``worker`` (cold start).
+
+        ``tier`` is the warmth tier the spawn starts from (event-log
+        attribution only; defaults from ``has_snapshot``)."""
         fn = self.functions[function]
         cid = self._next_cid
         self._next_cid += 1
@@ -390,6 +397,11 @@ class ClusterState:
         self._prov_by_worker[worker] += 1
         self._active_count[function] += 1
         self.ledger.containers_launched += 1
+        if self.events is not None:
+            if tier is None:
+                tier = (WarmthTier.SNAPSHOT_READY if has_snapshot
+                        else WarmthTier.DEAD)
+            self.events.spawn(now, cid, function, worker, tier)
         return c
 
     def acquire(self, c: Container, now: float, *,
@@ -399,6 +411,7 @@ class ClusterState:
         already-ACTIVE container, or provisioning completion.  Returns the
         idle seconds burned (0.0 unless this was a warm reuse)."""
         idle_s = 0.0
+        prior = c.state
         if c.state == ContainerState.WARM_IDLE:
             idle_s = now - c.warm_since
             self.ledger.add_idle(idle_s, c.resident_mb / 1024.0)
@@ -409,6 +422,8 @@ class ClusterState:
         if sanitized is not None:
             c.sanitized = sanitized
         self._update_spare(c)
+        if self.events is not None:
+            self.events.slot_bind(now, c.id, c.function, prior.value)
         return idle_s
 
     def release_slot(self, c: Container, now: float) -> bool:
@@ -416,6 +431,8 @@ class ClusterState:
         and should transition to WARM_IDLE via :meth:`to_idle`."""
         c.inflight -= 1
         self._update_spare(c)
+        if self.events is not None:
+            self.events.exec_end(now, c.id, c.function)
         return c.inflight == 0
 
     def to_idle(self, c: Container, now: float) -> None:
@@ -423,6 +440,8 @@ class ClusterState:
         self._transition(c, ContainerState.WARM_IDLE)
         c.warm_since = now
         c.last_used = now
+        if self.events is not None:
+            self.events.idle(now, c.id, c.function, c.resident_mb)
 
     # ------------------------------------------------------------------ #
     # the warmth-tier ladder: demote / promote (the ONLY tier mutations)
@@ -446,6 +465,8 @@ class ClusterState:
         assert tier < cur, f"demote must move down the ladder ({cur}->{tier})"
         self._bill_idle(c, now)
         if tier == WarmthTier.DEAD:
+            if self.events is not None:
+                self.events.expire(now, c.id, c.function, cur, "expire")
             self._destroy_billed(c)
             return
         assert tier in TIER_TO_STATE, \
@@ -460,6 +481,8 @@ class ClusterState:
         if tier == WarmthTier.SNAPSHOT_READY:
             self.snapshots.add(c.function)
         self.ledger.demotions += 1
+        if self.events is not None:
+            self.events.demote(now, c.id, c.function, cur, tier, new_mb)
         if self.on_demote is not None:
             self.on_demote(c, tier)
 
@@ -480,6 +503,8 @@ class ClusterState:
         self._add_used(c.worker, c.memory_mb - c.resident_mb)
         c.resident_mb = c.memory_mb
         self.ledger.promotions += 1
+        if self.events is not None:
+            self.events.promote(now, c.id, c.function, tier)
         return tier
 
     # ------------------------------------------------------------------ #
@@ -517,10 +542,15 @@ class ClusterState:
         if self.on_destroy is not None:
             self.on_destroy(c)
 
-    def destroy(self, c: Container, now: float) -> None:
+    def destroy(self, c: Container, now: float, *,
+                reason: str = "expire") -> None:
         """Scale-to-zero / eviction: close idle accounting, free memory,
-        drop from every index, fire the driver's teardown hook."""
+        drop from every index, fire the driver's teardown hook.  ``reason``
+        is event-log attribution only ("expire" = TTL / ladder death,
+        "evict" = memory pressure)."""
         self._bill_idle(c, now)
+        if self.events is not None:
+            self.events.expire(now, c.id, c.function, c.tier, reason)
         self._destroy_billed(c)
 
     # ------------------------------------------------------------------ #
@@ -540,6 +570,9 @@ class ClusterState:
             rec = RequestRecord(fn_name, arrival, start, end, cold=cold,
                                 startup=bd if cold else None)
             self.ledger.record(rec, memory_gb=mem_gb)
+        if self.events is not None:
+            self.events.exec_start(start, c.id, c.function, end, cold,
+                                   [a for _, a in items])
 
     def close_out(self, horizon: float) -> None:
         """End-of-run idle accounting for containers still idle-resident
@@ -641,7 +674,7 @@ def find_worker(state: ClusterState, fn: FunctionSpec, suite,
     if w is not None:
         return w
     for victim in suite.keepalive.evict_order(state.all_resident_idle(), ctx):
-        state.destroy(victim, state.now)
+        state.destroy(victim, state.now, reason="evict")
         w = suite.placement.choose_worker(fn, ctx)
         if w is not None:
             return w

@@ -187,16 +187,22 @@ class CostModel:
     # ------------------------------------------------------------------ #
     @classmethod
     def from_calibration(cls, path: str) -> "CostModel":
-        """Build from measured values written by benchmarks/bench_factors.py.
+        """Build from measured values written by benchmarks/bench_factors.py
+        or the closed loop in scripts/recalibrate.py (which inverts them
+        from a real-engine event log via ``repro.analyze.calibrate``).
 
         Expected keys: compile_base_s, load_bandwidth_gbps, runtime_init_s
-        (optional overrides); missing keys keep defaults.
+        (optional overrides); missing keys keep defaults.  Unknown keys
+        (e.g. a ``_meta`` provenance block) are ignored.
         """
         with open(path) as f:
             data = json.load(f)
         kw = {}
         for k in ("compile_base_s", "load_bandwidth_gbps",
-                  "snapshot_restore_frac", "provision_base_s"):
+                  "snapshot_restore_frac", "provision_base_s",
+                  "provision_per_gb_s", "resume_paused_s",
+                  "snapshot_write_s", "img_cached_provision_frac",
+                  "contention_alpha"):
             if k in data:
                 kw[k] = float(data[k])
         cm = cls(**kw)

@@ -81,6 +81,7 @@ class QoSLedger:
         colds = [r for r in self.records if r.cold]
         cold_lat = sorted(r.latency for r in colds)
         warm_lat = sorted(r.latency for r in self.records if not r.cold)
+        queue_wait = sorted(r.queue_wait for r in self.records)
         n = len(self.records)
         horizon = self.horizon or (max((r.end for r in self.records), default=0.0))
         out = {
@@ -92,6 +93,8 @@ class QoSLedger:
             "latency_mean_s": sum(lat) / n if n else float("nan"),
             "warm_p50_s": _pct(warm_lat, 0.50),
             "cold_p50_s": _pct(cold_lat, 0.50),
+            "queue_wait_p50_s": _pct(queue_wait, 0.50),
+            "queue_wait_p95_s": _pct(queue_wait, 0.95),
             "cold_starts": float(len(colds)),
             "cold_start_frequency": len(colds) / n if n else float("nan"),
             "containers_launched": float(self.containers_launched),

@@ -37,6 +37,7 @@ from typing import Deque, Dict, List, Optional, Sequence, Union
 from repro.core.cluster import (ClusterContext, ClusterState, PolicyDriver,
                                 find_worker, scale_breakdown)
 from repro.core.costmodel import CostModel
+from repro.core.events import EventLog
 from repro.core.lifecycle import (Breakdown, Container, FunctionSpec, Phase,
                                   WarmthTier)
 from repro.core.metrics import QoSLedger
@@ -70,18 +71,21 @@ class _Pending:
 class Simulator:
     def __init__(self, trace: Trace, suite: PolicySuite,
                  cost_model: Optional[CostModel] = None,
-                 cfg: Optional[SimConfig] = None):
+                 cfg: Optional[SimConfig] = None,
+                 events: Optional[EventLog] = None):
         self.trace = trace
         self.suite = suite
         self.cost_model = cost_model or CostModel()
         self.cfg = cfg or SimConfig()
+        self.events = events
         self.state = ClusterState(
             trace.functions,
             num_workers=self.cfg.num_workers,
             worker_memory_mb=self.cfg.worker_memory_mb,
             worker_speed=self.cfg.worker_speed,
             ledger=QoSLedger(horizon=trace.horizon),
-            tier_footprint_frac=self.cost_model.tier_footprint_frac)
+            tier_footprint_frac=self.cost_model.tier_footprint_frac,
+            events=events)
         self.state.ledger.cluster_capacity_gb = self.state.capacity_gb
         self.ledger = self.state.ledger
         self.policy = PolicyDriver(
@@ -94,6 +98,8 @@ class Simulator:
         self._seq = itertools.count()
         self._inflight_prewarm: set = set()   # functions being prewarmed
         self.phase_log: List[Breakdown] = []
+        self.events_processed = 0         # heap events popped (true
+                                          # simulator work; see bench_simcore)
 
     # ---- kernel views (back-compat with pre-kernel attribute names) ---- #
     @property
@@ -141,6 +147,7 @@ class Simulator:
 
         while self._events:
             t, _, kind, payload = heapq.heappop(self._events)
+            self.events_processed += 1
             if t > self.trace.horizon and kind == "tick":
                 continue
             self.state.now = max(self.state.now, t)
@@ -159,6 +166,8 @@ class Simulator:
     # handlers
     # ------------------------------------------------------------------ #
     def _on_arrival(self, pend: _Pending):
+        if self.events is not None:
+            self.events.arrival(self.now, pend.inv.function)
         self.policy.observe_arrival(pend.inv.function, self.now)
         self._dispatch(pend)
 
@@ -187,6 +196,8 @@ class Simulator:
             if len(self.queue) < self.cfg.max_queue:
                 self.queue.append(pend)
                 self._queued_count[fn_name] += 1
+                if self.events is not None:
+                    self.events.queue_join(self.now, fn_name)
             else:
                 self.ledger.dropped += 1
             return
@@ -233,7 +244,10 @@ class Simulator:
         bd = scale_breakdown(bd, self.state.speed(worker))
         self.phase_log.append(bd)
         c = self.state.admit(fn.name, worker, self.now,
-                             has_snapshot=tier == WarmthTier.SNAPSHOT_READY)
+                             has_snapshot=tier == WarmthTier.SNAPSHOT_READY,
+                             tier=tier)
+        if self.events is not None:
+            self.events.startup(self.now, c.id, fn.name, tier, bd)
         if st.snapshot:
             self.state.snapshots.add(fn.name)
         self._push(self.now + bd.total, "start_done", (c.id, pend, bd))
@@ -250,6 +264,8 @@ class Simulator:
         self.phase_log.append(bd)
         self.policy.on_promote(c, self._ctx(), idle_s, tier)
         self.state.promote_begin(c, self.now)
+        if self.events is not None:
+            self.events.startup(self.now, c.id, c.function, tier, bd)
         self._push(self.now + bd.total, "start_done", (c.id, pend, bd))
 
     def _on_start_done(self, payload):
@@ -340,6 +356,11 @@ class Simulator:
             self._push(self.now + self.suite.prewarm.tick_interval,
                        "tick", None)
 
+    def _queue_leave(self, pend: _Pending):
+        if self.events is not None:
+            self.events.queue_leave(self.now, pend.inv.function,
+                                    self.now - pend.arrival)
+
     def _drain_queue(self):
         progressed = True
         while self.queue and progressed:
@@ -351,16 +372,19 @@ class Simulator:
             fn = self.trace.functions[fn_name]
             c = self.suite.placement.choose_container(fn_name, ctx)
             if c is not None:
+                self._queue_leave(pend)
                 self._reuse(c, pend)
                 progressed = True
                 continue
             c = self.state.free_slot(fn_name)
             if c is not None:
+                self._queue_leave(pend)
                 self._begin_exec(c, pend, cold=False)
                 progressed = True
                 continue
             c = self.state.best_resident(fn_name)
             if c is not None and self.state.can_promote(c):
+                self._queue_leave(pend)
                 self._promote(c, pend)
                 progressed = True
                 continue
@@ -369,6 +393,7 @@ class Simulator:
             # (otherwise it stalls until an unrelated TTL expiry)
             worker = find_worker(self.state, fn, self.suite, ctx)
             if worker is not None:
+                self._queue_leave(pend)
                 self._cold_start(worker, fn, pend)
                 progressed = True
             else:
@@ -378,5 +403,6 @@ class Simulator:
 
 def simulate(trace: Trace, suite: PolicySuite, *,
              cost_model: Optional[CostModel] = None,
-             cfg: Optional[SimConfig] = None) -> QoSLedger:
-    return Simulator(trace, suite, cost_model, cfg).run()
+             cfg: Optional[SimConfig] = None,
+             events: Optional[EventLog] = None) -> QoSLedger:
+    return Simulator(trace, suite, cost_model, cfg, events=events).run()

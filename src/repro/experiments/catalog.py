@@ -54,6 +54,14 @@ AZURE_STUDY = _w("azure_like", "azure_study", seed=0, horizon=900.0,
 CHAINS3 = _w("chains", seed=1, rate=0.05, horizon=600.0, chain_len=3)
 RARE_ENGINE = _w("rare", "rare_engine", seed=3, inter_arrival=120.0,
                  horizon=600.0, jitter=0.05, num_functions=1)
+# calibration probes for scripts/recalibrate.py: one uncontended function
+# whose revisit gap lands inside a specific tiered_fixed ladder dwell
+# (warm 45s / paused ends 600s / snapshot ends 2400s), so every startup
+# event measures exactly one promote edge
+RARE_PAUSED = _w("rare", "rare_paused", seed=9, inter_arrival=90.0,
+                 horizon=420.0, jitter=0.05, num_functions=1)
+RARE_SNAPSHOT = _w("rare", "rare_snapshot", seed=9, inter_arrival=700.0,
+                   horizon=2200.0, jitter=0.05, num_functions=1)
 FLASH_CONC4 = _w("flash_crowd", "flash_conc4", seed=1, base_rate=0.5,
                  spike_rate=30.0, horizon=120.0, num_functions=2,
                  container_concurrency=4)
@@ -154,6 +162,22 @@ for label, sc in [
         name="calib/pause_pool", workload=AZURE_CALIB,
         policy="pause_pool", cluster=CALIB_CLUSTER, calibrated=True,
         description="generic pause-pool identity cell")),
+    ("engine_paused", Scenario(
+        name="calib/engine_paused", workload=RARE_PAUSED,
+        policy="tiered_fixed", calibrated=True,
+        cluster=ClusterSpec(num_workers=1, worker_memory_mb=4096.0),
+        engine=EngineSpec(arch="xlstm-125m", max_seq=16, batch=1,
+                          decode_steps=2, clock_speed=120.0, snapshots=True),
+        description="recalibration probe: ~90s revisit gap lands in the "
+                    "PAUSED dwell — every restart measures the thaw edge")),
+    ("engine_snapshot", Scenario(
+        name="calib/engine_snapshot", workload=RARE_SNAPSHOT,
+        policy="tiered_fixed", calibrated=True,
+        cluster=ClusterSpec(num_workers=1, worker_memory_mb=4096.0),
+        engine=EngineSpec(arch="xlstm-125m", max_seq=16, batch=1,
+                          decode_steps=2, clock_speed=240.0, snapshots=True),
+        description="recalibration probe: ~700s revisit gap lands in the "
+                    "SNAPSHOT_READY dwell — every restart measures restore")),
 ]:
     CALIBRATION[label] = register(sc)
 

@@ -2,7 +2,8 @@
 
     python -m repro.experiments list [--json]
     python -m repro.experiments run NAME [--driver sim|fleet|engine]...
-                                   [--json PATH] [--require-identical]
+                                   [--json PATH] [--events PATH]
+                                   [--require-identical]
     python -m repro.experiments sweep NAME [--driver D]
                                    [--axis FIELD=V1,V2,...]...
                                    [--json PATH]
@@ -75,13 +76,30 @@ def _cmd_list(args) -> int:
     return 0
 
 
+def _events_path(base: str, driver: str, n_drivers: int) -> str:
+    """One log per driver: ``PATH`` as-is for a single driver, else
+    ``PATH`` with a ``.{driver}.jsonl`` suffix."""
+    if n_drivers == 1:
+        return base
+    stem = base[:-6] if base.endswith(".jsonl") else base
+    return f"{stem}.{driver}.jsonl"
+
+
 def _cmd_run(args) -> int:
+    from repro.core.events import EventLog
+
     sc = registry.get(args.name)
     drivers = args.driver or ["sim"]
-    rows, ledgers = [], {}
+    rows, ledgers, logs = [], {}, {}
     for drv in drivers:
-        led = runner.run(sc, drv)
+        ev = EventLog() if args.events else None
+        led = runner.run(sc, drv, events=ev)
         ledgers[drv] = led
+        if ev is not None:
+            logs[drv] = ev
+            path = _events_path(args.events, drv, len(drivers))
+            ev.write_jsonl(path)
+            print(f"wrote {len(ev)} events to {path}")
         s = runner.summarize(sc, led)
         rows.append(_row(sc, drv, s))
         print(format_summary(f"{sc.name}[{drv}]", s))
@@ -89,7 +107,9 @@ def _cmd_run(args) -> int:
     if len(drivers) >= 2:
         base = drivers[0]
         for drv in drivers[1:]:
-            diff = runner.compare(ledgers[base], ledgers[drv])
+            diff = runner.compare(ledgers[base], ledgers[drv],
+                                  events_a=logs.get(base),
+                                  events_b=logs.get(drv))
             print(f"compare {base} vs {drv}: {diff}")
             rows.append({"scenario": sc.to_dict(),
                          "compare": [base, drv],
@@ -138,8 +158,14 @@ def main(argv: Optional[List[str]] = None) -> int:
                        choices=runner.DRIVERS,
                        help="repeatable; 2+ drivers also prints the diff")
     p_run.add_argument("--json", metavar="PATH")
+    p_run.add_argument("--events", metavar="PATH",
+                       help="capture the per-invocation event log to PATH "
+                            "(per-driver .{driver}.jsonl suffix when 2+ "
+                            "drivers); with --require-identical the diff "
+                            "also gates on event-sequence identity")
     p_run.add_argument("--require-identical", action="store_true",
-                       help="exit 1 unless all drivers' ledgers match")
+                       help="exit 1 unless all drivers' ledgers (and, with "
+                            "--events, event streams) match")
 
     p_sw = sub.add_parser("sweep", help="run a registered or ad-hoc grid")
     p_sw.add_argument("name", help="sweep name (or scenario name w/ --axis)")

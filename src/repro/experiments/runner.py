@@ -11,6 +11,11 @@ Drivers:
 All three return the same :class:`~repro.core.metrics.QoSLedger` schema,
 and :func:`compare` turns two ledgers into a field-for-field diff — the
 sim-vs-fleet ledger-identity gate as a library call.
+
+Every driver also accepts an ``events=`` :class:`~repro.core.events.EventLog`
+and emits the same typed per-invocation event stream; passing the captured
+logs to ``compare(..., events_a=, events_b=)`` tightens the identity gate
+from ledger totals to *event-sequence* identity (modulo wall-clock fields).
 """
 from __future__ import annotations
 
@@ -20,6 +25,7 @@ import math
 from dataclasses import dataclass
 from typing import Dict, Iterator, List, Optional, Tuple, Union
 
+from repro.core.events import EventDiff, EventLog, diff_events
 from repro.core.metrics import QoSLedger
 from repro.experiments import registry
 from repro.experiments.spec import Scenario
@@ -45,26 +51,35 @@ def build_trace(scenario: Scenario):
 
 
 def run(scenario: Union[str, Scenario], driver: str = "sim", *,
-        cost_model=None) -> QoSLedger:
-    """Run one scenario under one driver; returns its QoS ledger."""
+        cost_model=None, events: Optional[EventLog] = None) -> QoSLedger:
+    """Run one scenario under one driver; returns its QoS ledger.
+
+    ``events`` (optional) captures the typed per-invocation event stream
+    — the same schema from every driver, so streams are diffable."""
     sc = registry.resolve(scenario)
     if driver not in DRIVERS:
         raise ValueError(f"unknown driver {driver!r}; one of {DRIVERS}")
     cm = cost_model if cost_model is not None else sc.cost_model()
     trace = build_trace(sc)
+    if events is not None:
+        events.meta.setdefault("scenario", sc.name)
+        events.meta.setdefault("driver", driver)
     if driver == "sim":
         from repro.core.simulator import simulate
         return simulate(trace, sc.suite(), cost_model=cm,
-                        cfg=sc.sim_config())
+                        cfg=sc.sim_config(), events=events)
     if driver == "fleet":
         from repro.fleet import replay
         return replay(trace, sc.suite(), cost_model=cm,
-                      cfg=sc.fleet_config())
-    return _run_engine(sc, trace, cm)
+                      cfg=sc.fleet_config(), events=events)
+    return _run_engine(sc, trace, cm, events=events)
 
 
-def _run_engine(sc: Scenario, trace, cost_model) -> QoSLedger:
+def _run_engine(sc: Scenario, trace, cost_model,
+                events: Optional[EventLog] = None) -> QoSLedger:
     """Real engines on a scaled wall clock (imports jax lazily)."""
+    import time as _time
+
     from repro.fleet import (EngineBackend, EngineProfile, FleetRunner,
                              WallClock)
     from repro.serving.engine import SnapshotStore
@@ -79,10 +94,12 @@ def _run_engine(sc: Scenario, trace, cost_model) -> QoSLedger:
     suite = sc.suite()
     if es.snapshots:
         suite.startup = dataclasses.replace(suite.startup, snapshot=True)
+    if events is not None and events.wall_clock is None:
+        events.wall_clock = _time.perf_counter
     runner = FleetRunner(trace, suite, cost_model=cost_model,
                          cfg=sc.fleet_config(),
                          clock=WallClock(speed=es.clock_speed),
-                         backend=backend)
+                         backend=backend, events=events)
     return runner.run()
 
 
@@ -140,34 +157,51 @@ class FieldDiff:
 @dataclass(frozen=True)
 class LedgerDiff:
     fields: Dict[str, FieldDiff]
+    events: Optional[EventDiff] = None    # set when event logs were compared
 
     @property
     def identical(self) -> bool:
+        if self.events is not None and not self.events.identical:
+            return False
         return all(f.same for f in self.fields.values())
 
     def drift(self) -> List[str]:
-        """Names of fields that differ."""
-        return [k for k, f in self.fields.items() if not f.same]
+        """Names of fields that differ (plus "events" on stream drift)."""
+        out = [k for k, f in self.fields.items() if not f.same]
+        if self.events is not None and not self.events.identical:
+            out.append("events")
+        return out
 
     def __str__(self) -> str:
+        ev = "" if self.events is None else f"; {self.events}"
         if self.identical:
-            return f"identical ({len(self.fields)} fields)"
+            return f"identical ({len(self.fields)} fields){ev}"
         rows = [f"  {k}: {f.a!r} != {f.b!r} (delta {f.delta:+.6g})"
                 for k, f in self.fields.items() if not f.same]
-        return "ledger drift in {} of {} fields:\n{}".format(
-            len(rows), len(self.fields), "\n".join(rows))
+        return "ledger drift in {} of {} fields:\n{}{}".format(
+            len(rows), len(self.fields), "\n".join(rows), ev)
 
 
 def compare(a: Union[QoSLedger, Dict[str, float]],
-            b: Union[QoSLedger, Dict[str, float]]) -> LedgerDiff:
+            b: Union[QoSLedger, Dict[str, float]], *,
+            events_a=None, events_b=None) -> LedgerDiff:
     """Field-for-field diff of two ledgers (or summary dicts).
 
     ``compare(run(sc, "sim"), run(sc, "fleet")).identical`` is the
     sim-vs-fleet calibration gate; NaN == NaN (empty percentile fields),
     but a key present on only one side is always drift (schema check).
+
+    Passing the two runs' captured :class:`~repro.core.events.EventLog`\\ s
+    (or raw event lists) via ``events_a``/``events_b`` extends the gate to
+    event-sequence identity: the result is ``identical`` only if the
+    normalized streams match event for event (wall-clock fields and
+    same-timestamp interleavings excluded).
     """
     sa = a.summary() if isinstance(a, QoSLedger) else dict(a)
     sb = b.summary() if isinstance(b, QoSLedger) else dict(b)
     keys = sorted(set(sa) | set(sb))
+    ev = None
+    if events_a is not None and events_b is not None:
+        ev = diff_events(events_a, events_b)
     return LedgerDiff({k: FieldDiff(sa.get(k, _MISSING), sb.get(k, _MISSING))
-                       for k in keys})
+                       for k in keys}, events=ev)

@@ -134,6 +134,12 @@ class Frontend:
         return batch
 
     # ------------------------------------------------------------------ #
+    def queued(self, req: Request) -> bool:
+        """True iff ``req`` is still waiting in its function's queue
+        (event-log attribution only; O(queue depth), so callers guard it
+        behind the events-enabled path)."""
+        return any(r.id == req.id for r in self.queues.get(req.function, ()))
+
     def queued_count(self, function: str) -> int:
         return len(self.queues.get(function, ()))
 

@@ -41,6 +41,7 @@ import numpy as np
 
 from repro.core.cluster import find_worker
 from repro.core.costmodel import CostModel
+from repro.core.events import EventLog
 from repro.core.lifecycle import Breakdown, Container, Phase, WarmthTier
 from repro.core.metrics import QoSLedger
 from repro.core.policies.base import PolicySuite
@@ -77,13 +78,15 @@ class FleetRunner:
                  cost_model: Optional[CostModel] = None,
                  cfg: Optional[FleetConfig] = None,
                  clock: Optional[Clock] = None,
-                 backend: Optional[ExecutionBackend] = None):
+                 backend: Optional[ExecutionBackend] = None,
+                 events: Optional[EventLog] = None):
         self.trace = trace
         self.suite = suite
         self.cost_model = cost_model or CostModel()
         self.cfg = cfg or FleetConfig()
         self.clock = clock or VirtualClock()
         self.backend = backend or ModeledBackend(self.cost_model)
+        self.events = events
         self.frontend = Frontend(AdmissionConfig(
             max_queue_per_function=self.cfg.max_queue_per_function,
             slo_latency_s=self.cfg.slo_latency_s))
@@ -96,7 +99,8 @@ class FleetRunner:
                                slots_per_replica=self.cfg.slots_per_replica,
                                ledger=self.ledger,
                                tier_footprint_frac=(
-                                   self.cost_model.tier_footprint_frac))
+                                   self.cost_model.tier_footprint_frac),
+                               events=events)
         self.state = self.pool.state
         self.ledger.cluster_capacity_gb = self.state.capacity_gb
         self.autoscaler = Autoscaler(
@@ -107,6 +111,7 @@ class FleetRunner:
         self._seq = itertools.count()
         self._rid = itertools.count()
         self._inflight_prewarm: set = set()
+        self._joined: set = set()         # rids with an emitted queue_join
 
     @property
     def now(self) -> float:
@@ -166,9 +171,17 @@ class FleetRunner:
     # handlers
     # ------------------------------------------------------------------ #
     def _on_arrival(self, req: Request):
+        if self.events is not None:
+            self.events.arrival(self.now, req.function)
         self.autoscaler.observe_arrival(req.function, self.now)
         if self.frontend.submit(req):
             self._try_dispatch(req.function)
+            # the dispatch either consumed the request or left it parked;
+            # the simulator only queues when no capacity exists, so the
+            # join event fires only for requests that actually wait
+            if self.events is not None and self.frontend.queued(req):
+                self._joined.add(req.id)
+                self.events.queue_join(self.now, req.function)
 
     def _on_tick(self, _):
         ctx = self._ctx()
@@ -288,7 +301,15 @@ class FleetRunner:
         return True
 
     def _take_batch(self, fn_name: str) -> List[Request]:
-        return self.frontend.take_batch(fn_name, self.now, self.cfg.max_batch)
+        batch = self.frontend.take_batch(fn_name, self.now,
+                                         self.cfg.max_batch)
+        if self.events is not None:
+            for req in batch:
+                if req.id in self._joined:
+                    self._joined.discard(req.id)
+                    self.events.queue_leave(self.now, req.function,
+                                            self.now - req.arrival)
+        return batch
 
     def _launch(self, fn_name: str, worker: int, batch: List[Request]):
         st = self.suite.startup
@@ -303,6 +324,8 @@ class FleetRunner:
         replica, bd = self.pool.start_replica(
             fn_name, worker, self.now, tier=tier,
             deps_fraction=st.deps_fraction, from_pause_pool=from_pool)
+        if self.events is not None:
+            self.events.startup(self.now, replica.id, fn_name, tier, bd)
         if st.snapshot:
             self.state.snapshots.add(fn_name)
         self._push(self.now + bd.total, "start_done", (replica.id, batch, bd))
@@ -311,8 +334,11 @@ class FleetRunner:
         """Resume a demoted resident replica (the ladder's promote edge)."""
         replica = self.pool.replica_for(c)
         idle_s = self.now - c.warm_since
-        self.autoscaler.on_promote(c, self._ctx(), idle_s, c.tier)
+        tier = c.tier
+        self.autoscaler.on_promote(c, self._ctx(), idle_s, tier)
         bd = self.pool.promote_replica(replica, self.now)
+        if self.events is not None:
+            self.events.startup(self.now, replica.id, c.function, tier, bd)
         self._push(self.now + bd.total, "start_done", (replica.id, batch, bd))
 
     def _reuse(self, replica, batch: List[Request]):
@@ -366,8 +392,9 @@ def replay(trace: Trace, suite: PolicySuite, *,
            cost_model: Optional[CostModel] = None,
            cfg: Optional[FleetConfig] = None,
            clock: Optional[Clock] = None,
-           backend: Optional[ExecutionBackend] = None) -> QoSLedger:
+           backend: Optional[ExecutionBackend] = None,
+           events: Optional[EventLog] = None) -> QoSLedger:
     """Replay ``trace`` under ``suite``; returns the QoS ledger (same schema
     as ``core.simulator.simulate`` on the same trace)."""
     return FleetRunner(trace, suite, cost_model=cost_model, cfg=cfg,
-                       clock=clock, backend=backend).run()
+                       clock=clock, backend=backend, events=events).run()

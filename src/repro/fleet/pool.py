@@ -35,6 +35,7 @@ import numpy as np
 
 from repro.core.cluster import ClusterState, scale_breakdown
 from repro.core.costmodel import CostModel
+from repro.core.events import EventLog
 from repro.core.lifecycle import (Breakdown, Container, ContainerState,
                                   FunctionSpec, WarmthTier)
 from repro.core.metrics import QoSLedger
@@ -276,14 +277,15 @@ class EnginePool:
                  backend: Optional[ExecutionBackend] = None,
                  slots_per_replica: int = 1,
                  ledger: Optional[QoSLedger] = None,
-                 tier_footprint_frac: Optional[Dict] = None):
+                 tier_footprint_frac: Optional[Dict] = None,
+                 events: Optional[EventLog] = None):
         self.backend = backend or ModeledBackend()
         self.state = ClusterState(
             functions, num_workers=num_workers,
             worker_memory_mb=worker_memory_mb, worker_speed=worker_speed,
             ledger=ledger, default_concurrency=slots_per_replica,
             on_destroy=self._teardown, on_demote=self._demote_replica,
-            tier_footprint_frac=tier_footprint_frac)
+            tier_footprint_frac=tier_footprint_frac, events=events)
         self.replicas: Dict[int, Replica] = {}
         self.phase_log: List[Breakdown] = []
 
@@ -355,7 +357,8 @@ class EnginePool:
             tier = (WarmthTier.SNAPSHOT_READY if from_snapshot
                     else WarmthTier.DEAD)
         c = self.state.admit(function, worker, now,
-                             has_snapshot=tier == WarmthTier.SNAPSHOT_READY)
+                             has_snapshot=tier == WarmthTier.SNAPSHOT_READY,
+                             tier=tier)
         replica = Replica(container=c, spec=self.state.functions[function])
         self.replicas[c.id] = replica
         bd = self.backend.provision(

@@ -1,0 +1,170 @@
+"""analyze/ toolkit tests: the event-join must reproduce the ledger
+exactly (records and idle GB-s), the calibration inversion must be the
+exact inverse of the cost model (dry-run closed loop), and the CLI +
+SVG emitters must run end to end."""
+import json
+import math
+
+import pytest
+
+from repro.analyze import stats as S
+from repro.analyze.calibrate import (fidelity_report, measured_costs,
+                                     write_calibration)
+from repro.analyze.cli import main as analyze_main
+from repro.analyze.reader import InvalidEventLog, read_events
+from repro.core.costmodel import CostModel
+from repro.core.events import EventLog
+from repro.experiments import run
+from repro.experiments.runner import build_trace
+from repro.experiments.registry import get
+
+
+@pytest.fixture(scope="module")
+def tiered():
+    ev = EventLog()
+    led = run("calib/tiered_fixed", "sim", events=ev)
+    return led, ev
+
+
+# --------------------------------------------------------------------------- #
+# stats cross-checks against the ledger (same run, independent derivation)
+# --------------------------------------------------------------------------- #
+def test_invocation_join_reproduces_ledger_records(tiered):
+    led, ev = tiered
+    inv = S.invocations(ev.events)
+    assert len(inv) == len(led.records)
+    mine = sorted((s.function, s.arrival, s.start, s.end, s.cold)
+                  for s in inv)
+    theirs = sorted((r.function, r.arrival, r.start, r.end, r.cold)
+                    for r in led.records)
+    assert mine == theirs
+    # per-invocation queue waits match the record formula too
+    mw = sorted(round(s.queue_wait, 9) for s in inv)
+    tw = sorted(round(r.queue_wait, 9) for r in led.records)
+    assert mw == tw
+
+
+def test_tier_occupancy_matches_ledger_billing(tiered):
+    led, ev = tiered
+    occ = S.tier_occupancy(ev.events, horizon=led.horizon)
+    assert set(occ) == set(led.idle_gb_s_by_tier)
+    for tier, gb_s in led.idle_gb_s_by_tier.items():
+        assert occ[tier] == pytest.approx(gb_s, rel=1e-9), tier
+
+
+def test_cold_attribution_totals(tiered):
+    led, ev = tiered
+    att = S.cold_attribution(S.invocations(ev.events))
+    assert sum(r["requests"] for r in att.values()) == len(led.records)
+    assert sum(r["colds"] for r in att.values()) == \
+        sum(1 for r in led.records if r.cold)
+    for row in att.values():
+        assert 0.0 <= row["cold_rate"] <= 1.0
+        assert sum(row["by_tier"].values()) == row["colds"]
+
+
+def test_phase_percentiles_shape(tiered):
+    _, ev = tiered
+    pcts = S.phase_percentiles(S.invocations(ev.events), by="path")
+    assert "dead" in pcts and "total" in pcts["dead"]
+    cell = pcts["dead"]["total"]
+    assert cell["p50"] <= cell["p95"] <= cell["max"]
+    with pytest.raises(ValueError):
+        S.phase_percentiles([], by="nope")
+
+
+# --------------------------------------------------------------------------- #
+# calibration: inversion must be the model's exact inverse
+# --------------------------------------------------------------------------- #
+def _probe_events(name):
+    ev = EventLog()
+    run(name, "fleet", cost_model=CostModel(), events=ev)
+    return ev.events, dict(build_trace(get(name)).functions)
+
+
+def test_measured_costs_recover_model_defaults(tmp_path):
+    base = CostModel()
+    events, functions = [], {}
+    for cell in ("calib/engine_paused", "calib/engine_snapshot"):
+        ev, fns = _probe_events(cell)
+        events.extend(ev)
+        functions.update(fns)
+    calib = measured_costs(events, functions, base)
+    assert calib["provision_base_s"] == pytest.approx(base.provision_base_s)
+    assert calib["compile_base_s"] == pytest.approx(base.compile_base_s)
+    assert calib["load_bandwidth_gbps"] == \
+        pytest.approx(base.load_bandwidth_gbps)
+    assert calib["resume_paused_s"] == pytest.approx(base.resume_paused_s)
+    assert calib["snapshot_restore_frac"] == \
+        pytest.approx(base.snapshot_restore_frac)
+
+    # ...and the written file reproduces the model through from_calibration
+    path = str(tmp_path / "calibration.json")
+    write_calibration(path, calib)
+    recal = CostModel.from_calibration(path)
+    rows = fidelity_report(events, functions, recal)
+    assert rows, "probe cells must produce startup samples"
+    for r in rows:
+        assert abs(r["rel_err"]) < 1e-6, r
+
+
+def test_fidelity_report_flags_a_wrong_model():
+    events, functions = _probe_events("calib/engine_snapshot")
+    wrong = CostModel(compile_base_s=9.0)
+    rows = fidelity_report(events, functions, wrong)
+    dead = [r for r in rows if r["tier"] == "dead"]
+    assert dead and all(r["rel_err"] > 1.0 for r in dead)
+
+
+# --------------------------------------------------------------------------- #
+# reader + CLI + plots
+# --------------------------------------------------------------------------- #
+def test_reader_raises_on_invalid_stream(tmp_path, tiered):
+    _, ev = tiered
+    broken = EventLog(meta=dict(ev.meta))
+    broken.events = [dict(e) for e in ev.events[:10]]
+    broken.events[3]["kind"] = "mystery"
+    path = str(tmp_path / "broken.jsonl")
+    broken.write_jsonl(path)
+    with pytest.raises(InvalidEventLog, match="mystery"):
+        read_events(path)
+    assert len(read_events(path, validate=False).events) == 10
+
+
+def test_cli_report_json_and_plots(tmp_path, capsys, tiered):
+    _, ev = tiered
+    path = str(tmp_path / "events.jsonl")
+    ev.write_jsonl(path)
+
+    assert analyze_main([path, "--validate"]) == 0
+    assert analyze_main([path]) == 0
+    out = capsys.readouterr().out
+    assert "serving paths" in out and "cold-start attribution" in out
+
+    assert analyze_main([path, "--json"]) == 0
+    payload = json.loads(capsys.readouterr().out)
+    assert payload["invocations"] == 2867
+    assert payload["meta"]["driver"] == "sim"
+    assert set(payload["tier_occupancy_gb_s"]) == \
+        {"warm_idle", "paused", "snapshot_ready"}
+
+    plot_dir = tmp_path / "plots"
+    assert analyze_main([path, "--plots", str(plot_dir),
+                         "--fidelity"]) == 0
+    out = capsys.readouterr().out
+    assert "fidelity[calib/tiered_fixed]" in out
+    for name in ("timeline.svg", "breakdown.svg", "pareto.svg"):
+        body = (plot_dir / name).read_text()
+        assert body.startswith("<svg") and body.rstrip().endswith("</svg>")
+
+
+def test_timeline_intervals_are_ordered(tiered):
+    from repro.analyze.plots import container_intervals
+    _, ev = tiered
+    lanes = container_intervals(ev.events)
+    assert lanes
+    for segs in lanes.values():
+        for state, t0, t1 in segs:
+            assert t1 >= t0
+            assert state in ("provisioning", "active", "warm_idle",
+                             "paused", "snapshot_ready", "img_cached")

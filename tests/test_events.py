@@ -1,0 +1,141 @@
+"""Event-log tests: schema round-trip + validation, normalization, the
+EventDiff gate, and sim-vs-fleet identity at *event* granularity on the
+calibration cells (a far sharper gate than ledger totals)."""
+import math
+
+import pytest
+
+from repro.core.events import (EVENT_SCHEMA, EventLog, diff_events,
+                               normalize, validate_events)
+from repro.experiments import compare, run
+
+
+def _capture(name, driver):
+    ev = EventLog()
+    led = run(name, driver, events=ev)
+    return led, ev
+
+
+# --------------------------------------------------------------------------- #
+# schema + serialization
+# --------------------------------------------------------------------------- #
+def test_jsonl_round_trip(tmp_path):
+    led, ev = _capture("calib/engine_paused", "sim")
+    ev.meta["note"] = "round-trip"
+    path = str(tmp_path / "events.jsonl")
+    ev.write_jsonl(path)
+    back = EventLog.read_jsonl(path)
+    assert back.meta["scenario"] == "calib/engine_paused"
+    assert back.meta["note"] == "round-trip"
+    assert back.events == ev.events
+    assert validate_events(back.events) == []
+
+
+def test_reader_rejects_foreign_and_future_files(tmp_path):
+    p = tmp_path / "bad.jsonl"
+    p.write_text('{"schema": "something.else", "version": 1, "meta": {}}\n')
+    with pytest.raises(ValueError, match="not a repro.events file"):
+        EventLog.read_jsonl(str(p))
+    p.write_text('{"schema": "repro.events", "version": 99, "meta": {}}\n')
+    with pytest.raises(ValueError, match="version"):
+        EventLog.read_jsonl(str(p))
+
+
+def test_validate_catches_bad_events():
+    ok = [{"t": 0.0, "kind": "arrival", "function": "f"}]
+    assert validate_events(ok) == []
+    problems = validate_events([
+        {"t": 1.0, "kind": "arrival", "function": "f"},     # fine
+        {"t": 0.5, "kind": "arrival", "function": "f"},     # t decreases
+        {"t": 1.0, "kind": "nope"},                         # unknown kind
+        {"t": 2.0, "kind": "spawn", "cid": 1, "function": "f",
+         "worker": 0, "tier": "lukewarm"},                   # bad tier
+        {"t": 3.0, "kind": "arrival"},                      # missing field
+        {"t": 4.0, "kind": "arrival", "function": "f",
+         "surprise": 1},                                     # extra field
+    ])
+    assert len(problems) == 5
+
+
+def test_every_emitted_kind_is_in_the_schema():
+    _, ev = _capture("calib/tiered_fixed", "sim")
+    kinds = set(ev.counts())
+    assert kinds <= set(EVENT_SCHEMA)
+    # the ladder cell exercises most of the vocabulary
+    assert {"arrival", "spawn", "startup", "slot_bind", "exec_start",
+            "exec_end", "idle", "demote", "expire"} <= kinds
+
+
+# --------------------------------------------------------------------------- #
+# normalization + diff
+# --------------------------------------------------------------------------- #
+def test_normalize_strips_wall_fields_and_orders_ties():
+    a = [{"t": 1.0, "kind": "exec_end", "cid": 2, "function": "f",
+          "wall": 123.4},
+         {"t": 1.0, "kind": "arrival", "function": "f"}]
+    b = [{"t": 1.0, "kind": "arrival", "function": "f", "wall": 9.9},
+         {"t": 1.0, "kind": "exec_end", "cid": 2, "function": "f"}]
+    na, nb = normalize(a), normalize(b)
+    assert na == nb
+    assert all("wall" not in ev for ev in na)
+    assert diff_events(a, b).identical
+
+
+def test_diff_reports_divergence_and_length_mismatch():
+    a = [{"t": 0.0, "kind": "arrival", "function": "f"}]
+    b = [{"t": 0.0, "kind": "arrival", "function": "g"}]
+    d = diff_events(a, b)
+    assert not d.identical and d.first_divergence == 0
+    assert "diverge" in str(d)
+    d2 = diff_events(a, a + b)
+    assert not d2.identical and d2.n_a == 1 and d2.n_b == 2
+
+
+# --------------------------------------------------------------------------- #
+# the tentpole gate: event-sequence identity across drivers
+# --------------------------------------------------------------------------- #
+CALIB_CELLS = ("calib/default", "calib/concurrency4", "calib/heterogeneous",
+               "calib/tiered_fixed", "calib/tiered_spes", "calib/pause_pool",
+               "calib/engine_paused", "calib/engine_snapshot",
+               "fleet_levers/serial")     # queue-forcing flash crowd
+
+
+@pytest.mark.parametrize("name", CALIB_CELLS)
+def test_sim_vs_fleet_event_identity(name):
+    led_a, ev_a = _capture(name, "sim")
+    led_b, ev_b = _capture(name, "fleet")
+    assert validate_events(ev_a.events) == []
+    assert validate_events(ev_b.events) == []
+    diff = compare(led_a, led_b, events_a=ev_a, events_b=ev_b)
+    assert diff.identical, str(diff)
+
+
+def test_event_drift_fails_the_compare_gate():
+    led_a, ev_a = _capture("calib/engine_paused", "sim")
+    led_b, ev_b = _capture("calib/engine_paused", "fleet")
+    ev_b.events[-1] = dict(ev_b.events[-1], t=ev_b.events[-1]["t"] + 1.0)
+    diff = compare(led_a, led_b, events_a=ev_a, events_b=ev_b)
+    assert not diff.identical
+    assert "events" in diff.drift()
+
+
+def test_queue_events_balance_on_the_queueing_cell():
+    # fleet_levers/serial's flash crowd on a small cluster forces
+    # queueing; every join must leave, and waits must be non-negative —
+    # in BOTH drivers (their queue bookkeeping differs internally)
+    for driver in ("sim", "fleet"):
+        _, ev = _capture("fleet_levers/serial", driver)
+        counts = ev.counts()
+        assert counts.get("queue_join", 0) > 0, driver
+        assert counts["queue_join"] == counts["queue_leave"], driver
+        waits = [e["wait_s"] for e in ev.events
+                 if e["kind"] == "queue_leave"]
+        assert all(w >= 0.0 for w in waits)
+        assert not math.isnan(sum(waits))
+
+
+def test_events_off_by_default_changes_nothing():
+    led_plain = run("calib/engine_paused", "sim")
+    led_logged, ev = _capture("calib/engine_paused", "sim")
+    assert len(ev) > 0
+    assert compare(led_plain, led_logged).identical

@@ -1,0 +1,57 @@
+"""QoSLedger edge cases: percentile helper behaviour, the empty-ledger
+summary (all-NaN percentiles, no crashes), and the queue-wait fields."""
+import math
+
+import pytest
+
+from repro.core.lifecycle import Breakdown, Phase
+from repro.core.metrics import QoSLedger, RequestRecord, _pct
+
+
+def _rec(arrival, start, end, *, cold=False, startup=None, fn="f"):
+    return RequestRecord(function=fn, arrival=arrival, start=start, end=end,
+                         cold=cold, startup=startup)
+
+
+# --------------------------------------------------------------------------- #
+def test_pct_empty_is_nan():
+    assert math.isnan(_pct([], 0.5))
+
+
+def test_pct_single_and_extremes():
+    assert _pct([3.0], 0.5) == 3.0
+    vals = [1.0, 2.0, 3.0, 4.0]
+    assert _pct(vals, 0.0) == 1.0
+    assert _pct(vals, 1.0) == 4.0
+    assert _pct(vals, 0.5) == 2.0
+
+
+def test_empty_ledger_summary_has_nan_percentiles_not_errors():
+    s = QoSLedger().summary()
+    for key in ("latency_p50_s", "cold_p50_s", "warm_p50_s",
+                "queue_wait_p50_s", "queue_wait_p95_s",
+                "throughput_rps", "cold_start_frequency"):
+        assert math.isnan(s[key]), key
+    assert s["requests"] == 0.0
+    assert s["cost_usd"] == 0.0
+
+
+# --------------------------------------------------------------------------- #
+def test_queue_wait_excludes_startup_time():
+    bd = Breakdown({Phase.PROVISION: 0.1, Phase.CODE_INIT: 0.4})
+    # arrived at 0, startup took 0.5, began at 0.7 -> 0.2s of real queueing
+    r = _rec(0.0, 0.7, 1.0, cold=True, startup=bd)
+    assert r.queue_wait == pytest.approx(0.2)
+    # warm request served instantly -> no wait; clamped at zero either way
+    assert _rec(5.0, 5.0, 5.3).queue_wait == 0.0
+    assert _rec(0.0, 0.4, 1.0, cold=True, startup=bd).queue_wait == 0.0
+
+
+def test_summary_queue_wait_percentiles():
+    led = QoSLedger()
+    waits = [0.0, 0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9]
+    for w in waits:
+        led.record(_rec(0.0, w, w + 0.1), memory_gb=1.0)
+    s = led.summary()
+    assert s["queue_wait_p50_s"] == 0.4
+    assert s["queue_wait_p95_s"] == 0.9
