@@ -1,0 +1,245 @@
+"""Batch-vs-scalar sweep throughput: the vectorized-grid acceptance gate.
+
+Runs the registered 64-cell ``batch_dense64`` grid (dense poisson, ~24k
+invocations per cell) two ways and compares wall clock:
+
+  * **scalar** — one event-heap ``Simulator`` per cell, sequential (the
+    ``driver="sim"`` path a sweep takes today); cost scales with total
+    heap events (~100k per cell here);
+  * **batch** — every cell advanced in lockstep by the single jitted
+    ``lax.scan``-over-``vmap`` program from ``core.batchsim``; cost
+    scales with grid steps x functions only, so the denser the trace the
+    wider the gap.
+
+The headline row gates ``speedup >= GATE_SPEEDUP`` (50x) on the dense
+grid, measured on the **steady** batch wall (second invocation — the
+compile is once per table shape and amortizes across every grid of that
+shape; build+compile is reported separately).  Aggregate heap-event
+throughput (scalar heap events / batch wall) is also emitted: it is the
+same work measured in the scalar simulator's own unit.
+
+A second, ungated section reports the azure-trace ``batch_grid64``
+(sparse: log-uniform rates, most functions nearly idle).  There the
+scalar heap is cheap and the batch step still pays T x F compute, so the
+speedup is small — the honest boundary of the technique, kept visible
+on purpose (scalar side estimated from an 8-cell subsample).
+
+Correctness rides along: ``SPOT_CELLS`` cells of the dense grid are
+re-run through the scalar simulator and must agree with the batch
+ledgers under the documented tolerance contract
+(``core.batchsim.TOL_*``, docs/batchsim.md).
+
+Outputs:
+  * ``emit("batchsim/...")`` rows via ``benchmarks/run.py``;
+  * ``BENCH_batchsim.json`` in the CWD.
+
+CLI:
+  ``python benchmarks/bench_batchsim.py``            full gated run
+  ``python benchmarks/bench_batchsim.py --smoke``    2x2 mini-grid: the
+    tolerance spot-check plus an informational speedup row, sized for CI
+    fast tier (no 50x gate — tiny grids don't amortize the step cost).
+"""
+import json
+import sys
+import time
+
+GATE_SPEEDUP = 50.0        # dense-grid gate: batch must beat scalar 50x
+SPOT_CELLS = 4             # dense-grid cells re-checked for tolerance
+AZURE_SCALAR_SAMPLE = 8    # azure grid: scalar subsample for the estimate
+
+# the dense scenario at a shorter horizon: same per-function density as
+# the gated grid (the regime the tolerance contract is documented for),
+# ~1/3 the work
+SMOKE_OVERRIDES = {"workload.params.horizon": 240.0}
+SMOKE_TTLS = (30.0, 120.0)
+SMOKE_SEEDS = (1, 2)
+
+
+def _dense_cells():
+    from repro.experiments import registry
+    return registry.get_sweep("batch_dense64").scenarios()
+
+
+def _azure_cells():
+    from repro.experiments import registry
+    return registry.get_sweep("batch_grid64").scenarios()
+
+
+def _smoke_cells():
+    from repro.experiments import registry
+    base = registry.get("batchdense").with_overrides(SMOKE_OVERRIDES)
+    return [base.with_overrides({"keepalive_ttl": ttl,
+                                 "workload.seed": seed})
+            for ttl in SMOKE_TTLS for seed in SMOKE_SEEDS]
+
+
+def _scalar_side(cells):
+    """Sequential event-heap replay; returns (wall_s, invocations,
+    heap_events)."""
+    from repro.core.simulator import Simulator
+    from repro.experiments.runner import build_trace
+
+    traces = [build_trace(sc) for sc in cells]   # outside the clock, via
+    suites = [sc.suite() for sc in cells]        # the runner's trace LRU
+    n_inv = sum(len(tr.invocations) for tr in traces)
+    n_heap = 0
+    t0 = time.perf_counter()
+    for sc, tr, su in zip(cells, traces, suites):
+        sim_obj = Simulator(tr, su, cost_model=sc.cost_model(),
+                            cfg=sc.sim_config())
+        sim_obj.run()
+        n_heap += sim_obj.events_processed
+    wall = time.perf_counter() - t0
+    return wall, n_inv, n_heap
+
+
+def _batch_side(cells):
+    """Returns (build_s, first_s, steady_s, ledgers): table build, first
+    (compiling) run, and second (steady) run of the jitted program."""
+    from repro.core import batchsim
+    from repro.experiments.runner import build_trace
+
+    t0 = time.perf_counter()
+    tables = batchsim.build_tables(cells, trace_fn=build_trace)
+    build_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    nw, fs, agg = batchsim.run_tables(tables)
+    first_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    nw, fs, agg = batchsim.run_tables(tables)
+    steady_s = time.perf_counter() - t0
+
+    return build_s, first_s, steady_s, \
+        batchsim.ledgers_from_agg(tables, nw, fs, agg)
+
+
+def _spot_rows(cells):
+    from repro.core import batchsim
+    from repro.experiments.runner import build_trace
+    stride = max(len(cells) // SPOT_CELLS, 1)
+    return batchsim.spot_check(cells[::stride][:SPOT_CELLS],
+                               trace_fn=build_trace)
+
+
+def _grid(emit, tag, cells, *, scalar_cells=None):
+    """Benchmark one grid; returns its JSON record.  ``scalar_cells``
+    limits the scalar side to a subsample (wall is extrapolated)."""
+    sub = cells if scalar_cells is None else cells[::len(cells)
+                                                  // scalar_cells]
+    wall, n_inv, n_heap = _scalar_side(sub)
+    scale = len(cells) / len(sub)
+    est = "" if scale == 1.0 else " (est)"
+    scalar_wall, n_inv, n_heap = wall * scale, n_inv * scale, n_heap * scale
+
+    build_s, first_s, steady_s, ledgers = _batch_side(cells)
+    speedup = scalar_wall / steady_s if steady_s else float("inf")
+    heap_eps = n_heap / steady_s if steady_s else float("inf")
+
+    emit(f"batchsim/{tag}/scalar_wall_s", scalar_wall,
+         f"{len(cells)} cells, {n_inv:.0f} inv, "
+         f"{n_heap:.0f} heap events{est}", units="s")
+    emit(f"batchsim/{tag}/batch_steady_wall_s", steady_s,
+         f"build={build_s:.2f}s compile+run={first_s:.2f}s", units="s")
+    emit(f"batchsim/{tag}/speedup", speedup,
+         f"scalar/batch steady{est}", units="x")
+    emit(f"batchsim/{tag}/heap_events_per_s", heap_eps,
+         "scalar heap events / batch steady wall", units="per_s")
+    return {"grid": tag, "cells": len(cells),
+            "invocations": n_inv, "heap_events": n_heap,
+            "scalar_wall_s": scalar_wall, "scalar_sampled": scale != 1.0,
+            "batch_build_s": build_s, "batch_first_s": first_s,
+            "batch_steady_s": steady_s,
+            "speedup": speedup, "heap_events_per_s": heap_eps}
+
+
+def _spot_dict(r) -> dict:
+    """Plain-Python record (json chokes on numpy scalars)."""
+    return {"name": r.name, "ok": bool(r.ok),
+            "cold_rate_sim": float(r.cold_rate_sim),
+            "cold_rate_batch": float(r.cold_rate_batch),
+            "idle_gb_s_sim": float(r.idle_gb_s_sim),
+            "idle_gb_s_batch": float(r.idle_gb_s_batch)}
+
+
+def _check_spots(emit, rows):
+    bad = [r for r in rows if not r.ok]
+    for r in rows:
+        emit(f"batchsim/spot/{r.name}/cold_rate_abs_err",
+             abs(r.cold_rate_batch - r.cold_rate_sim),
+             f"sim={r.cold_rate_sim:.4f} batch={r.cold_rate_batch:.4f} "
+             f"idle sim={r.idle_gb_s_sim:.1f} "
+             f"batch={r.idle_gb_s_batch:.1f} "
+             f"{'ok' if r.ok else 'FAIL'}", units="abs")
+    return bad
+
+
+def run(emit, *, json_path="BENCH_batchsim.json"):
+    dense = _dense_cells()
+    spots = _spot_rows(dense)
+    bad = _check_spots(emit, spots)
+
+    record = {"spot_check": [_spot_dict(r) for r in spots],
+              "gate_speedup": GATE_SPEEDUP, "grids": []}
+
+    record["grids"].append(_grid(emit, "dense64", dense))
+    record["grids"].append(_grid(emit, "azure64", _azure_cells(),
+                                 scalar_cells=AZURE_SCALAR_SAMPLE))
+
+    failures = []
+    if bad:
+        failures.append(f"{len(bad)} spot-check cell(s) out of tolerance")
+    dense_speedup = record["grids"][0]["speedup"]
+    if dense_speedup < GATE_SPEEDUP:
+        failures.append(f"dense64 speedup {dense_speedup:.1f}x below the "
+                        f"{GATE_SPEEDUP:.0f}x gate")
+    record["failures"] = failures
+
+    with open(json_path, "w") as f:
+        json.dump(record, f, indent=2)
+
+    for msg in failures:
+        print(f"WARNING: {msg}", file=sys.stderr)
+    return record
+
+
+def run_smoke(emit, *, json_path="BENCH_batchsim_smoke.json"):
+    cells = _smoke_cells()
+    from repro.core import batchsim
+    spots = batchsim.spot_check(cells)
+    bad = _check_spots(emit, spots)
+    grid = _grid(emit, "smoke4", cells)
+    with open(json_path, "w") as f:
+        json.dump({"spot_check": [_spot_dict(r) for r in spots],
+                   "grid": grid}, f, indent=2)
+    return bad
+
+
+def main() -> int:
+    try:
+        from benchmarks.emit import csv_emit as emit
+    except ImportError:        # run as a script: benchmarks/ is sys.path[0]
+        from emit import csv_emit as emit
+
+    if "--smoke" in sys.argv:
+        bad = run_smoke(emit)
+        if bad:
+            print(f"FAIL: {len(bad)} spot-check cell(s) out of the "
+                  "documented batch-vs-scalar tolerance")
+            return 1
+        print("ok: smoke grid within tolerance")
+        return 0
+
+    record = run(emit)
+    if record["failures"]:
+        print("FAIL: " + "; ".join(record["failures"]))
+        return 1
+    print(f"ok: dense64 speedup "
+          f"{record['grids'][0]['speedup']:.1f}x >= {GATE_SPEEDUP:.0f}x, "
+          "spot-check within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -134,12 +134,50 @@ def _placement_row(emit):
     return speedup
 
 
+def _batch_row(emit, num_functions: int, horizon: float):
+    """The same azure_like replay through the vectorized batch driver
+    (``core.batchsim``): one jitted program instead of an event heap.
+    Emitted next to the scalar rows so the trajectory shows both; at this
+    single-cell sparse scale the batch step's T x F compute dominates, so
+    this is the technique's floor — grids of dense cells are where it
+    pays off (see bench_batchsim)."""
+    from repro.core import batchsim
+    from repro.experiments.spec import (ClusterSpec, Scenario, WorkloadSpec)
+
+    cfg = _cfg(num_functions)
+    sc = Scenario(
+        name=f"simcore-batch-{num_functions}",
+        workload=WorkloadSpec("azure_like",
+                              {"horizon": horizon,
+                               "num_functions": num_functions}, seed=11),
+        policy="provider_default",
+        cluster=ClusterSpec(num_workers=cfg.num_workers,
+                            worker_memory_mb=cfg.worker_memory_mb))
+    t0 = time.perf_counter()
+    tables = batchsim.build_tables([sc])
+    build_s = time.perf_counter() - t0
+    batchsim.run_tables(tables)              # compile
+    t0 = time.perf_counter()
+    nw, fs, agg = batchsim.run_tables(tables)
+    steady_s = time.perf_counter() - t0
+    n_inv = tables.invocations[0]
+    eps = n_inv / steady_s if steady_s else float("inf")
+    emit(f"simcore/azure_like/{num_functions}fns/batch_events_per_s", eps,
+         f"inv={n_inv} steady={steady_s * 1e3:.1f}ms build={build_s:.2f}s",
+         units="per_s")
+    return {"functions": num_functions, "driver": "batch",
+            "invocations": n_inv, "build_s": build_s,
+            "steady_s": steady_s, "events_per_s": eps}
+
+
 def check_cliff(results, frac=CLIFF_FRAC):
-    """Scales whose heap-events/s collapse relative to the sweep's best."""
-    if len(results) < 2:
+    """Scales whose heap-events/s collapse relative to the sweep's best
+    (scalar rows only — batch-driver rows have no heap)."""
+    rows = [r for r in results if "heap_events_per_s" in r]
+    if len(rows) < 2:
         return []
-    best = max(r["heap_events_per_s"] for r in results)
-    return [r for r in results if r["heap_events_per_s"] < frac * best]
+    best = max(r["heap_events_per_s"] for r in rows)
+    return [r for r in rows if r["heap_events_per_s"] < frac * best]
 
 
 def run(emit, *, scales=SCALES, json_path="BENCH_simcore.json"):
@@ -160,6 +198,8 @@ def run(emit, *, scales=SCALES, json_path="BENCH_simcore.json"):
               f"{r['heap_events_per_s']:.0f} heap-events/s, below "
               f"{CLIFF_FRAC:.0%} of the sweep's best — per-scale cliff "
               "(O(n) dispatch path?)", file=sys.stderr)
+    n0, h0 = scales[0]
+    results.append(_batch_row(emit, n0, h0))
     _placement_row(emit)
     with open(json_path, "w") as f:
         json.dump(results, f, indent=2)

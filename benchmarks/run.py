@@ -16,6 +16,9 @@ values no longer need ``* 1e8``-style scale hacks — rows default to
                    schedules vs binary fixed-TTL keep-alive
   bench_simcore    simulator replay throughput (events/sec vs function
                    count; writes BENCH_simcore.json — the perf trajectory)
+  bench_batchsim   batch-vs-scalar sweep throughput: the vectorized-grid
+                   50x gate on a dense 64-cell grid + the batch-vs-sim
+                   tolerance spot-check (writes BENCH_batchsim.json)
   bench_roofline   dry-run/roofline summary (deliverables e+g)
 
 The simulated modules are thin declarations over the scenario registry
@@ -34,10 +37,10 @@ import sys
 import time
 import traceback
 
-from benchmarks import (bench_csf, bench_csl, bench_factors, bench_fleet,
-                        bench_platforms, bench_qos, bench_roofline,
-                        bench_serving, bench_simcore, bench_tiers,
-                        bench_tradeoffs)
+from benchmarks import (bench_batchsim, bench_csf, bench_csl, bench_factors,
+                        bench_fleet, bench_platforms, bench_qos,
+                        bench_roofline, bench_serving, bench_simcore,
+                        bench_tiers, bench_tradeoffs)
 from benchmarks.emit import csv_emit
 
 MODULES = [
@@ -51,6 +54,7 @@ MODULES = [
     ("fleet", bench_fleet),
     ("tiers", bench_tiers),
     ("simcore", bench_simcore),
+    ("batchsim", bench_batchsim),
     ("roofline", bench_roofline),
 ]
 

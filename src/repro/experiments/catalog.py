@@ -254,6 +254,45 @@ register_sweep(Sweep(
     description="fleet_demo example: four policies on the azure trace"))
 
 
+BATCHGRID = register(Scenario(
+    name="batchgrid", workload=AZURE_FLEET, policy="provider_default",
+    description="batch-driver base: azure trace for the 64-cell "
+                "throughput grid (bench_batchsim)"))
+
+register_sweep(Sweep(
+    name="batch_grid64", base=BATCHGRID,
+    axes={"keepalive_ttl": (15.0, 30.0, 60.0, 120.0, 240.0, 480.0,
+                            900.0, 1800.0),
+          "workload.params.num_functions": (5, 10, 20, 40),
+          "policy": ("provider_short", "tiered_fixed")},
+    description="64-cell TTL x scale x policy grid on the azure trace "
+                "(every cell batch-supported)"))
+
+# dense grid for the batch-vs-scalar throughput gate: scalar cost scales
+# with invocations (~24k per cell at rate 40), batch cost only with the
+# step count — the regime where one jitted program replaces 64 event heaps
+BATCHDENSE = register(Scenario(
+    name="batchdense",
+    workload=WorkloadSpec("poisson", {"rate": 60.0, "horizon": 600.0,
+                                      "num_functions": 20}, seed=1),
+    policy="provider_default",
+    # few big workers: 128 container slots keep an all-cold burst
+    # (~1.6 s/request occupancy, ~79 req/s capacity) clear of the
+    # queueing-collapse boundary, while the small worker *count* keeps
+    # the batch step's F x W placement math cheap
+    cluster=ClusterSpec(num_workers=4, worker_memory_mb=32768.0),
+    description="dense poisson base for the bench_batchsim throughput "
+                "grid (~36k invocations per cell)"))
+
+register_sweep(Sweep(
+    name="batch_dense64", base=BATCHDENSE,
+    axes={"keepalive_ttl": (15.0, 30.0, 60.0, 120.0, 240.0, 480.0,
+                            900.0, 1800.0),
+          "workload.seed": tuple(range(1, 9))},
+    description="64-cell TTL x seed dense-poisson grid — the "
+                "bench_batchsim >=50x throughput gate"))
+
+
 def study_sweep():
     """The full-catalog policy sweep for examples/coldstart_study.py.
 

@@ -6,7 +6,8 @@
                                    [--require-identical]
     python -m repro.experiments sweep NAME [--driver D]
                                    [--axis FIELD=V1,V2,...]...
-                                   [--json PATH]
+                                   [--json PATH] [--progress]
+                                   [--max-cells N]
 
 ``run`` with several ``--driver`` flags replays the SAME scenario through
 each driver and prints the ledger diff; ``--require-identical`` exits
@@ -133,11 +134,24 @@ def _cmd_sweep(args) -> int:
                       axes=dict(args.axis))
     else:
         sweep = registry.get_sweep(args.name)
+    progress = None
+    if args.progress:
+        def progress(i, total, sc, s):
+            print(f"[{i}/{total}] {sc.name}: "
+                  f"cold%={s['cold_start_frequency'] * 100:.2f} "
+                  f"idle={s['idle_gb_s']:.1f}GB-s", flush=True)
     rows = []
-    for driver in (args.driver or [None]):
-        for sc, s in runner.run_sweep(sweep, driver):
-            rows.append(_row(sc, driver or sweep.driver, s))
-            print(format_summary(f"{sc.name}[{driver or sweep.driver}]", s))
+    try:
+        for driver in (args.driver or [None]):
+            for sc, s in runner.run_sweep(sweep, driver,
+                                          progress=progress,
+                                          max_cells=args.max_cells):
+                rows.append(_row(sc, driver or sweep.driver, s))
+                print(format_summary(
+                    f"{sc.name}[{driver or sweep.driver}]", s))
+    except ValueError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
     if args.json:
         _write_json(args.json, rows)
     return 0
@@ -174,6 +188,11 @@ def main(argv: Optional[List[str]] = None) -> int:
                       metavar="FIELD=V1,V2,...",
                       help="ad-hoc axis over a base *scenario*; repeatable")
     p_sw.add_argument("--json", metavar="PATH")
+    p_sw.add_argument("--progress", action="store_true",
+                      help="print a [i/N] line as each cell finishes")
+    p_sw.add_argument("--max-cells", type=int, default=256, metavar="N",
+                      help="refuse grids larger than N cells instead of "
+                           "silently running them (default 256)")
 
     args = ap.parse_args(argv)
     try:

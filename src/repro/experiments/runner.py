@@ -22,8 +22,9 @@ from __future__ import annotations
 import dataclasses
 import json
 import math
+from collections import OrderedDict
 from dataclasses import dataclass
-from typing import Dict, Iterator, List, Optional, Tuple, Union
+from typing import (Callable, Dict, Iterator, List, Optional, Tuple, Union)
 
 from repro.core.events import EventDiff, EventLog, diff_events
 from repro.core.metrics import QoSLedger
@@ -31,28 +32,36 @@ from repro.experiments import registry
 from repro.experiments.spec import Scenario
 from repro.experiments.sweep import Sweep
 
-DRIVERS = ("sim", "fleet", "engine")
+DRIVERS = ("sim", "fleet", "engine", "batch")
 
 # traces are deterministic in (workload spec, derived seed), so scenario
 # grids that share a workload reuse one build instead of regenerating it
-# per policy point (the drivers never mutate a Trace)
-_TRACE_CACHE: Dict[str, object] = {}
+# per policy point (the drivers never mutate a Trace).  True LRU: a hit
+# refreshes recency, so a hot trace survives a sweep whose other axes
+# churn the cache.
+_TRACE_CACHE: "OrderedDict[str, object]" = OrderedDict()
 _TRACE_CACHE_MAX = 32
 
 
 def build_trace(scenario: Scenario):
     key = json.dumps({"w": scenario.workload.to_dict(),
                       "seed": scenario.seed}, sort_keys=True)
-    if key not in _TRACE_CACHE:
-        if len(_TRACE_CACHE) >= _TRACE_CACHE_MAX:
-            _TRACE_CACHE.pop(next(iter(_TRACE_CACHE)))
+    if key in _TRACE_CACHE:
+        _TRACE_CACHE.move_to_end(key)
+    else:
+        while len(_TRACE_CACHE) >= _TRACE_CACHE_MAX:
+            _TRACE_CACHE.popitem(last=False)
         _TRACE_CACHE[key] = scenario.trace()
     return _TRACE_CACHE[key]
 
 
 def run(scenario: Union[str, Scenario], driver: str = "sim", *,
-        cost_model=None, events: Optional[EventLog] = None) -> QoSLedger:
+        cost_model=None, events: Optional[EventLog] = None):
     """Run one scenario under one driver; returns its QoS ledger.
+
+    sim/fleet/engine return a :class:`~repro.core.metrics.QoSLedger`;
+    ``driver="batch"`` returns a :class:`~repro.core.batchsim.BatchLedger`
+    (same ``summary()`` schema, percentiles NaN — see docs/batchsim.md).
 
     ``events`` (optional) captures the typed per-invocation event stream
     — the same schema from every driver, so streams are diffable."""
@@ -60,6 +69,13 @@ def run(scenario: Union[str, Scenario], driver: str = "sim", *,
     if driver not in DRIVERS:
         raise ValueError(f"unknown driver {driver!r}; one of {DRIVERS}")
     cm = cost_model if cost_model is not None else sc.cost_model()
+    if driver == "batch":
+        if events is not None:
+            raise ValueError("driver='batch' keeps aggregates, not "
+                             "per-invocation events; use driver='sim'")
+        from repro.core.batchsim import simulate_batch
+        return simulate_batch([sc], cost_model=cost_model,
+                              trace_fn=build_trace)[0]
     trace = build_trace(sc)
     if events is not None:
         events.meta.setdefault("scenario", sc.name)
@@ -103,8 +119,7 @@ def _run_engine(sc: Scenario, trace, cost_model,
     return runner.run()
 
 
-def summarize(scenario: Union[str, Scenario],
-              ledger: QoSLedger) -> Dict[str, float]:
+def summarize(scenario: Union[str, Scenario], ledger) -> Dict[str, float]:
     """Ledger summary with the scenario's SLA threshold applied."""
     sc = registry.resolve(scenario)
     return ledger.summary(sla_latency_s=sc.slo_latency_s)
@@ -116,13 +131,46 @@ def run_summary(scenario: Union[str, Scenario], driver: str = "sim", *,
     return summarize(sc, run(sc, driver, cost_model=cost_model))
 
 
+# callback invoked after each finished sweep cell: (index_1based, total,
+# scenario, summary) — the CLI's --progress prints one line per call
+ProgressFn = Callable[[int, int, Scenario, Dict[str, float]], None]
+
+
 def run_sweep(sweep: Union[str, Sweep], driver: Optional[str] = None, *,
-              cost_model=None) -> Iterator[Tuple[Scenario, Dict[str, float]]]:
-    """Yield ``(scenario, summary)`` for every cell of a sweep grid."""
+              cost_model=None, progress: Optional[ProgressFn] = None,
+              max_cells: Optional[int] = None) \
+        -> Iterator[Tuple[Scenario, Dict[str, float]]]:
+    """Yield ``(scenario, summary)`` for every cell of a sweep grid.
+
+    ``driver="batch"`` advances the whole grid as one jitted JAX program
+    (``repro.core.batchsim``) and yields the reconstructed per-cell
+    summaries in grid order.  ``max_cells`` refuses oversized grids with
+    a clear error instead of silently grinding through them; ``progress``
+    is called after each cell (batch: after the batched run completes).
+    """
     sw = registry.resolve_sweep(sweep)
     drv = driver or sw.driver
-    for sc in sw.scenarios():
-        yield sc, run_summary(sc, drv, cost_model=cost_model)
+    n = len(sw)
+    if max_cells is not None and n > max_cells:
+        raise ValueError(
+            f"sweep {sw.name!r} has {n} cells, over the max_cells={max_cells}"
+            f" guard — narrow the grid or raise the limit (CLI: --max-cells)")
+    cells = sw.scenarios()
+    if drv == "batch":
+        from repro.core.batchsim import simulate_batch
+        ledgers = simulate_batch(cells, cost_model=cost_model,
+                                 trace_fn=build_trace)
+        for i, (sc, led) in enumerate(zip(cells, ledgers)):
+            s = summarize(sc, led)
+            if progress is not None:
+                progress(i + 1, n, sc, s)
+            yield sc, s
+        return
+    for i, sc in enumerate(cells):
+        s = run_summary(sc, drv, cost_model=cost_model)
+        if progress is not None:
+            progress(i + 1, n, sc, s)
+        yield sc, s
 
 
 # --------------------------------------------------------------------------- #
@@ -197,8 +245,8 @@ def compare(a: Union[QoSLedger, Dict[str, float]],
     normalized streams match event for event (wall-clock fields and
     same-timestamp interleavings excluded).
     """
-    sa = a.summary() if isinstance(a, QoSLedger) else dict(a)
-    sb = b.summary() if isinstance(b, QoSLedger) else dict(b)
+    sa = a.summary() if hasattr(a, "summary") else dict(a)
+    sb = b.summary() if hasattr(b, "summary") else dict(b)
     keys = sorted(set(sa) | set(sb))
     ev = None
     if events_a is not None and events_b is not None:

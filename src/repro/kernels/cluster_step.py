@@ -1,0 +1,297 @@
+"""Pallas kernel for the batch cold-start simulator's per-step hot loop.
+
+One grid program advances ONE scenario cell through a ``chunk`` of fixed-dt
+timesteps: the cohort state (``nw`` container counts, ``fs`` per-function
+scalars, ``free`` worker capacity) lives in VMEM scratch across the
+sequential chunk axis, so a whole simulation streams only the per-chunk
+arrival tile from HBM.  The cell axis is parallel — a 64-cell ``Sweep``
+grid is 64 independent programs.
+
+The step itself — TTL-expiry walk down the demotion schedule, warm-hit
+serving with tier promotes, first-fit spawn placement, per-tier idle
+billing — is implemented here in kernel style (iota one-hots, per-worker
+cumsum placement) and tested for parity against the pure-jnp oracle
+``repro.kernels.ref.cluster_step_ref`` under ``interpret=True``
+(tests/test_batchsim.py).  Layout constants (FS_*/FP_*/SC_*/AG_* columns)
+are shared from ``kernels/ref.py``.
+
+Shapes are cold-start sized (F functions x W workers, both small), far
+from the fp32 (8, 128) TPU tile — fine in interpret mode (CPU CI) and
+acceptable-but-padded when compiled; the CPU production path in
+``repro.core.batchsim`` uses the jitted oracle directly.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.ref import (AG_COLD, AG_DEMOTIONS, AG_EXEC_GB_S,
+                               AG_IDLE_PAUSED, AG_IDLE_SNAP, AG_IDLE_WARM,
+                               AG_LAT_SUM, AG_LAUNCHED, AG_N, AG_PROMOTIONS,
+                               AG_QWAIT_SUM, AG_REQUESTS, AG_WARM, BIG_TIME,
+                               FP_EXEC_GB, FP_EXEC_S, FP_MEM_GB, FP_MEM_MB,
+                               FP_SVC, FS_DEADLINE, FS_EDGE, FS_HAS_SNAP,
+                               FS_IMG, FS_N, FS_QUEUED, FS_TIER, N_TIERS,
+                               SC_DT, SC_HORIZON, SC_IMG_CACHE, SC_N,
+                               SC_SANITIZE_S, SC_SNAPSHOT, T_DEAD, T_IMG,
+                               T_PAUSED, T_SNAP, T_WARM)
+
+DEFAULT_CHUNK = 128
+
+
+def _pick(table, idx):
+    """Row-wise gather ``table[f, idx[f]]`` as a one-hot contraction."""
+    k = table.shape[1]
+    onehot = (idx[:, None] == jnp.arange(k, dtype=jnp.float32)[None, :])
+    return (table * onehot).sum(axis=1)
+
+
+def _frac_at(frac, tiers):
+    """Footprint fraction of each function's tier ([F] from frac [5])."""
+    onehot = (tiers[:, None]
+              == jnp.arange(N_TIERS, dtype=jnp.float32)[None, :])
+    return (frac[None, :] * onehot).sum(axis=1)
+
+
+def _kernel_step(nw, fs, free, arrivals, conc, now, fparam, promote, dwell,
+                 ntier, frac, scal, n_edges):
+    """One fixed-dt cohort step (kernel-style implementation; semantics
+    documented on ``ref.cluster_step_ref`` and in docs/batchsim.md)."""
+    f32 = jnp.float32
+    dt = scal[SC_DT]
+    dt_eff = jnp.clip(scal[SC_HORIZON] - now, 0.0, dt)
+    active = (dt_eff > 0.0).astype(f32)
+
+    tier, edge, deadline = fs[:, FS_TIER], fs[:, FS_EDGE], fs[:, FS_DEADLINE]
+    queued, has_snap, img = fs[:, FS_QUEUED], fs[:, FS_HAS_SNAP], fs[:, FS_IMG]
+    mem = fparam[:, FP_MEM_MB]
+    exec_s = fparam[:, FP_EXEC_S]
+    exec_gb = fparam[:, FP_EXEC_GB]
+    svc = fparam[:, FP_SVC]
+    mem_gb = fparam[:, FP_MEM_GB]
+    agg = jnp.zeros((AG_N,), f32)
+
+    # 1. expiry walk — up to n_edges schedule edges can fire per step
+    for _ in range(n_edges):
+        n = nw.sum(axis=1)
+        tgt = _pick(ntier, jnp.clip(edge, 0, n_edges - 1))
+        fire = ((n > 0) & (deadline <= now)).astype(f32) * active
+        died = fire * (tgt == T_DEAD)
+        demoted = fire - died
+        new_res = mem * _frac_at(frac, tgt) * (1.0 - died)
+        delta_mb = (new_res - mem * _frac_at(frac, tier)) * fire
+        free = free - (nw * delta_mb[:, None]).sum(axis=0)
+        agg = agg.at[AG_DEMOTIONS].add((demoted * n).sum())
+        nw = nw * (1.0 - died)[:, None]
+        nxt = _pick(dwell, jnp.clip(edge + 1, 0, n_edges - 1))
+        deadline = jnp.where(demoted > 0, now + nxt,
+                             jnp.where(died > 0, BIG_TIME, deadline))
+        tier = jnp.where(demoted > 0, tgt, tier)
+        has_snap = jnp.maximum(has_snap, demoted * (tgt == T_SNAP))
+        edge = edge + fire
+
+    # 2. spawn to cover within-step concurrency: the host-precomputed
+    # peak overlap ``conc`` (exact from event timestamps) or the
+    # Little's-law floor demand*exec_s/dt, whichever is larger
+    demand = queued + arrivals
+    n = nw.sum(axis=1)
+    required = jnp.maximum(
+        jnp.ceil(demand * exec_s / jnp.maximum(dt_eff, 1e-9)), conc)
+    spawn_want = jnp.clip(required - n, 0.0, demand)
+    spawn_tier = jnp.where(
+        has_snap > 0, T_SNAP,
+        jnp.where((scal[SC_IMG_CACHE] > 0) & (img > 0), T_IMG, T_DEAD))
+    spawn_cost = _pick(promote, spawn_tier)
+
+    # vectorized first-fit (see ref.cluster_step_ref): parallel packing
+    # against the current free vector, proportional scale-back on any
+    # over-committed worker
+    need = (spawn_want * active)[:, None]
+    cap_w = jnp.maximum(jnp.floor(free[None, :]
+                                  / jnp.maximum(mem, 1.0)[:, None]), 0.0)
+    take = jnp.clip(need - (jnp.cumsum(cap_w, axis=1) - cap_w), 0.0, cap_w)
+    used_w = (take * mem[:, None]).sum(axis=0)
+    scale = jnp.where(used_w > free,
+                      free / jnp.maximum(used_w, 1e-9), 1.0)
+    take = take * scale[None, :]
+    nw_pre = nw
+    free = free - (take * mem[:, None]).sum(axis=0)
+    nw = nw + take
+    granted = take.sum(axis=1)
+    has_snap = jnp.maximum(has_snap, (granted > 0) * scal[SC_SNAPSHOT])
+    img = jnp.maximum(img, (granted > 0).astype(f32))
+
+    # 3. serve queued + fresh demand
+    capacity = jnp.floor((n + granted) * svc
+                         * jnp.where(dt > 0, dt_eff / dt, 0.0))
+    served = jnp.minimum(demand, capacity)
+    cohort_demoted = (tier < T_WARM) & (n > 0)
+    # promote only the concurrency the step needs; surplus demoted
+    # containers retire instead of re-arming (see ref.cluster_step_ref)
+    used = jnp.clip(
+        jnp.maximum(jnp.ceil(served * exec_s / jnp.maximum(dt_eff, 1e-9)),
+                    conc), 1.0, jnp.maximum(n, 1.0))
+    promoted_req = jnp.where(cohort_demoted, jnp.minimum(served, used), 0.0)
+    cold_spawn = jnp.minimum(granted, served - promoted_req)
+    warm_served = served - promoted_req - cold_spawn
+    prom_cost = _pick(promote, tier)
+    restore = cohort_demoted & (served > 0)
+    res_now = mem * _frac_at(frac, tier)
+    # warm-cohort surplus retires exponentially at dt/warm_dwell — the
+    # per-container TTL clocks the shared deadline can't express (see
+    # ref.cluster_step_ref)
+    decaying = (~cohort_demoted) & (served > 0) & (n > 0)
+    surplus = jnp.clip(n - used, 0.0, None)
+    decay = surplus * jnp.minimum(dt_eff / jnp.maximum(dwell[:, 0], 1e-9),
+                                  1.0)
+    keep = jnp.where(
+        restore & (n > 0), used / jnp.maximum(n, 1.0),
+        jnp.where(decaying, 1.0 - decay / jnp.maximum(n, 1.0), 1.0))
+    delta = jnp.where(restore, keep * (mem - res_now), 0.0) \
+        - (1.0 - keep) * res_now
+    free = free - (nw_pre * delta[:, None]).sum(axis=0)
+    nw = nw - nw_pre * (1.0 - keep)[:, None]
+    tier = jnp.where(restore, T_WARM, tier)
+    agg = agg.at[AG_PROMOTIONS].add(promoted_req.sum())
+
+    leftover = demand - served
+    sanitize = scal[SC_SANITIZE_S]
+    busy_warm = warm_served * (exec_s + sanitize)
+    busy_cold = promoted_req * (exec_s + prom_cost) \
+        + cold_spawn * (exec_s + spawn_cost)
+    agg = agg.at[AG_REQUESTS].add(served.sum())
+    agg = agg.at[AG_COLD].add((promoted_req + cold_spawn).sum())
+    agg = agg.at[AG_WARM].add(warm_served.sum())
+    agg = agg.at[AG_LAUNCHED].add(granted.sum())
+    agg = agg.at[AG_LAT_SUM].add((busy_warm + busy_cold).sum()
+                                 + leftover.sum() * dt_eff)
+    agg = agg.at[AG_QWAIT_SUM].add(leftover.sum() * dt_eff)
+    agg = agg.at[AG_EXEC_GB_S].add(
+        ((busy_warm + (promoted_req + cold_spawn) * exec_s) * exec_gb).sum())
+
+    hit = (served + granted) > 0
+    edge = jnp.where(hit, 0.0, edge)
+    deadline = jnp.where(hit, now + exec_s + dwell[:, 0], deadline)
+    tier = jnp.where(hit, T_WARM, tier)
+
+    # 4. idle GB-s at the cohort tier's footprint
+    idle_cs = jnp.clip(nw.sum(axis=1) * dt_eff - busy_warm - busy_cold,
+                       0.0, None)
+    idle_gb = idle_cs * mem_gb * _frac_at(frac, tier)
+    agg = agg.at[AG_IDLE_WARM].add((idle_gb * (tier == T_WARM)).sum())
+    agg = agg.at[AG_IDLE_PAUSED].add((idle_gb * (tier == T_PAUSED)).sum())
+    agg = agg.at[AG_IDLE_SNAP].add((idle_gb * (tier == T_SNAP)).sum())
+
+    fs = jnp.stack([tier, edge, deadline, leftover, has_snap, img], axis=1)
+    return nw, fs, free, agg
+
+
+def _cluster_kernel(nw_ref, fs_ref, free_ref, arr_ref, conc_ref, fparam_ref,
+                    promote_ref, dwell_ref, ntier_ref, frac_ref, scal_ref,
+                    nw_out, fs_out, free_out, agg_out,
+                    nw_s, fs_s, free_s, agg_s, *,
+                    chunk: int, num_chunks: int, n_edges: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        nw_s[...] = nw_ref[0]
+        fs_s[...] = fs_ref[0]
+        free_s[...] = free_ref[0]
+        agg_s[...] = jnp.zeros_like(agg_s)
+
+    arr = arr_ref[0]                                 # (chunk, F)
+    conc = conc_ref[0]                               # (chunk, F)
+    scal = scal_ref[0]
+    dt = scal[SC_DT]
+    tables = (fparam_ref[0], promote_ref[0], dwell_ref[0], ntier_ref[0],
+              frac_ref[0], scal)
+
+    def body(t, carry):
+        nw, fs, free, agg = carry
+        now = (ci * chunk + t).astype(jnp.float32) * dt
+        nw, fs, free, d = _kernel_step(nw, fs, free, arr[t], conc[t], now,
+                                       *tables, n_edges)
+        return nw, fs, free, agg + d
+
+    nw, fs, free, agg = jax.lax.fori_loop(
+        0, chunk, body, (nw_s[...], fs_s[...], free_s[...], agg_s[...]))
+    nw_s[...] = nw
+    fs_s[...] = fs
+    free_s[...] = free
+    agg_s[...] = agg
+
+    @pl.when(ci == num_chunks - 1)
+    def _finish():
+        nw_out[0] = nw_s[...]
+        fs_out[0] = fs_s[...]
+        free_out[0] = free_s[...]
+        agg_out[0] = agg_s[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def cluster_sim_pallas(nw, fs, free, arrivals, conc, fparam, promote, dwell,
+                       ntier, frac, scal, *, chunk: int = DEFAULT_CHUNK,
+                       interpret: bool = True):
+    """Advance every cell through all T steps in one kernel launch.
+
+    nw: (C, F, W); fs: (C, F, FS_N); free: (C, W); arrivals and conc
+    (per-step peak concurrency): (C, T, F); fparam/promote: (C, F, 5);
+    dwell/ntier: (C, F, K); frac: (C, 5); scal: (C, SC_N).  T must be a
+    multiple of ``chunk`` (the driver pads arrivals with empty steps —
+    post-horizon steps are no-ops).
+
+    Returns ``(nw_final, fs_final, free_final, agg)`` with agg (C, AG_N).
+    """
+    c, t, f = arrivals.shape
+    w = nw.shape[2]
+    k = dwell.shape[2]
+    ck = min(chunk, t)
+    assert t % ck == 0, f"T={t} not a multiple of chunk={ck}"
+    nc = t // ck
+
+    kernel = functools.partial(_cluster_kernel, chunk=ck, num_chunks=nc,
+                               n_edges=k)
+    cell = lambda c_, ci: (c_, 0, 0)         # per-cell block, chunk-invariant
+    cell2 = lambda c_, ci: (c_, 0)
+    return pl.pallas_call(
+        kernel,
+        grid=(c, nc),
+        in_specs=[
+            pl.BlockSpec((1, f, w), cell),                        # nw
+            pl.BlockSpec((1, f, FS_N), cell),                     # fs
+            pl.BlockSpec((1, w), cell2),                          # free
+            pl.BlockSpec((1, ck, f), lambda c_, ci: (c_, ci, 0)),  # arrivals
+            pl.BlockSpec((1, ck, f), lambda c_, ci: (c_, ci, 0)),  # conc
+            pl.BlockSpec((1, f, 5), cell),                        # fparam
+            pl.BlockSpec((1, f, N_TIERS), cell),                  # promote
+            pl.BlockSpec((1, f, k), cell),                        # dwell
+            pl.BlockSpec((1, f, k), cell),                        # ntier
+            pl.BlockSpec((1, N_TIERS), cell2),                    # frac
+            pl.BlockSpec((1, SC_N), cell2),                       # scal
+        ],
+        out_specs=[
+            pl.BlockSpec((1, f, w), cell),
+            pl.BlockSpec((1, f, FS_N), cell),
+            pl.BlockSpec((1, w), cell2),
+            pl.BlockSpec((1, AG_N), cell2),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((c, f, w), jnp.float32),
+            jax.ShapeDtypeStruct((c, f, FS_N), jnp.float32),
+            jax.ShapeDtypeStruct((c, w), jnp.float32),
+            jax.ShapeDtypeStruct((c, AG_N), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((f, w), jnp.float32),
+            pltpu.VMEM((f, FS_N), jnp.float32),
+            pltpu.VMEM((w,), jnp.float32),
+            pltpu.VMEM((AG_N,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(nw, fs, free, arrivals, conc, fparam, promote, dwell, ntier, frac,
+      scal)
