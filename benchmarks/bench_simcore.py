@@ -28,19 +28,30 @@ Outputs:
   * ``BENCH_simcore.json`` in the CWD — one record per scale, so successive
     runs give the events/sec trajectory over time.
 
+A **stress tier** (ROADMAP item 2) replays streamed ``azure_full``
+traces at 10k and 50k functions through the same scalar driver with the
+bounded-memory config (``ledger_record_cap``, ``keep_phase_log=False``)
+and reports a ``peak_rss_mb`` column.  Gates: stress heap-events/s must
+stay >= ``STRESS_FRAC`` of the 2000-function row (flat hot path at
+trace scale) and the 50k row's peak RSS must stay under
+``STRESS_RSS_MB`` (memory O(live state), not O(trace)).
+
 CLI:
-  ``python benchmarks/bench_simcore.py``            full sweep (100/500/2000)
+  ``python benchmarks/bench_simcore.py``            full sweep
+    (100/500/2000 + the 10k/50k stress tier)
   ``python benchmarks/bench_simcore.py --smoke``    100-function quick check
-    with a conservative throughput floor — a CI tripwire for O(n) regressions
-    in the dispatch path, not a precise measurement.
+    with a conservative throughput floor, plus a streamed 10k-function row
+    with a peak-RSS assertion — a CI tripwire for O(n) regressions in the
+    dispatch path and O(trace) memory regressions in the stream path.
 """
 import json
+import resource
 import sys
 import time
 
 from repro.core.policies import suite
 from repro.core.simulator import SimConfig, Simulator
-from repro.core.workload import azure_like
+from repro.core.workload import azure_full, azure_like
 
 PLACEMENT_WORKERS = 2000     # worker count for the placement-index row
 PLACEMENT_QUERIES = 2000
@@ -62,6 +73,18 @@ SMOKE_FLOOR_EPS = 2_000.0
 # scale drops it by integer factors, far below 0.4x.
 CLIFF_FRAC = 0.4
 
+# stress tier: (num_functions, horizon_s, rate_per_s) azure_full streams.
+# Rates keep each row at a comparable invocation count (~60-90k) so wall
+# time measures the hot path, not trace length.
+STRESS_SCALES = ((10_000, 600.0, 100.0), (50_000, 600.0, 150.0))
+SMOKE_STRESS = (10_000, 300.0, 50.0)
+# stress gates (the ISSUE-8 acceptance criteria): heap-events/s at trace
+# scale must reach this fraction of the 2000-function row, and the 50k
+# row must fit in this much resident memory
+STRESS_FRAC = 0.5
+STRESS_RSS_MB = 4096.0
+SMOKE_RSS_MB = 2048.0
+
 NUM_WORKERS = 8
 
 
@@ -72,13 +95,18 @@ def _cfg(num_functions: int) -> SimConfig:
                      worker_memory_mb=max(per_worker_mb, 16_384.0))
 
 
-def _one(num_functions: int, horizon: float) -> dict:
-    tr = azure_like(horizon, num_functions=num_functions, seed=11)
-    sim = Simulator(tr, suite("provider_default"), cfg=_cfg(num_functions))
+def _peak_rss_mb() -> float:
+    """Process peak RSS in MB (ru_maxrss is KB on Linux)."""
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+
+
+def _run_row(tr, num_functions: int, horizon: float, cfg: SimConfig,
+             n_inv_hint=None) -> dict:
+    sim = Simulator(tr, suite("provider_default"), cfg=cfg)
     t0 = time.perf_counter()
     led = sim.run()
     wall = time.perf_counter() - t0
-    n_inv = len(tr.invocations)
+    n_inv = n_inv_hint if n_inv_hint is not None else len(tr.invocations)
     n_heap = sim.events_processed
     return {
         "functions": num_functions,
@@ -90,7 +118,32 @@ def _one(num_functions: int, horizon: float) -> dict:
         "wall_s": wall,
         "events_per_s": n_inv / wall if wall else float("inf"),
         "heap_events_per_s": n_heap / wall if wall else float("inf"),
+        "peak_rss_mb": _peak_rss_mb(),
     }
+
+
+def _one(num_functions: int, horizon: float) -> dict:
+    tr = azure_like(horizon, num_functions=num_functions, seed=11)
+    return _run_row(tr, num_functions, horizon, _cfg(num_functions))
+
+
+def _stress_one(num_functions: int, horizon: float,
+                rate_per_s: float) -> dict:
+    """One streamed azure_full row under the bounded-memory config: the
+    arrival list is never materialized, the ledger keeps aggregates + a
+    10k reservoir, and the per-cold Breakdown log is off."""
+    tr = azure_full(horizon, num_functions=num_functions, seed=2019,
+                    rate_per_s=rate_per_s)
+    cfg = _cfg(num_functions)
+    cfg.ledger_record_cap = 10_000
+    cfg.keep_phase_log = False
+    # streams have no len(); count one deterministic pass (cheap relative
+    # to the replay, and it keeps invocations/wall comparable across rows)
+    n_inv = sum(1 for _ in tr)
+    r = _run_row(tr, num_functions, horizon, cfg, n_inv_hint=n_inv)
+    r["stress"] = True
+    r["rate_per_s"] = rate_per_s
+    return r
 
 
 def _placement_row(emit):
@@ -172,15 +225,38 @@ def _batch_row(emit, num_functions: int, horizon: float):
 
 def check_cliff(results, frac=CLIFF_FRAC):
     """Scales whose heap-events/s collapse relative to the sweep's best
-    (scalar rows only — batch-driver rows have no heap)."""
-    rows = [r for r in results if "heap_events_per_s" in r]
+    (materialized scalar rows only — batch-driver rows have no heap, and
+    streamed stress rows have their own gate, check_stress)."""
+    rows = [r for r in results
+            if "heap_events_per_s" in r and not r.get("stress")]
     if len(rows) < 2:
         return []
     best = max(r["heap_events_per_s"] for r in rows)
     return [r for r in rows if r["heap_events_per_s"] < frac * best]
 
 
-def run(emit, *, scales=SCALES, json_path="BENCH_simcore.json"):
+def check_stress(results, frac=STRESS_FRAC, rss_mb=STRESS_RSS_MB):
+    """Stress-tier gate failures: a streamed row's heap-events/s below
+    ``frac`` of the 2000-function scalar row, or any stress row whose
+    peak RSS exceeds ``rss_mb``."""
+    base = [r for r in results
+            if r.get("functions") == 2000 and not r.get("stress")
+            and "heap_events_per_s" in r]
+    stress = [r for r in results if r.get("stress")]
+    fails = []
+    for r in stress:
+        if base and r["heap_events_per_s"] < frac * base[0]["heap_events_per_s"]:
+            fails.append((r, f"heap-events/s {r['heap_events_per_s']:.0f} < "
+                             f"{frac:.0%} of the 2000-fn row "
+                             f"({base[0]['heap_events_per_s']:.0f})"))
+        if r["peak_rss_mb"] > rss_mb:
+            fails.append((r, f"peak RSS {r['peak_rss_mb']:.0f}MB > "
+                             f"{rss_mb:.0f}MB bound"))
+    return fails
+
+
+def run(emit, *, scales=SCALES, stress_scales=STRESS_SCALES,
+        json_path="BENCH_simcore.json"):
     results = []
     for n, horizon in scales:
         r = _one(n, horizon)
@@ -193,11 +269,23 @@ def run(emit, *, scales=SCALES, json_path="BENCH_simcore.json"):
              f"heap={r['heap_events']} "
              f"({r['heap_events_per_inv']:.2f}/inv)",
              units="per_s")
+    for n, horizon, rate in stress_scales:
+        r = _stress_one(n, horizon, rate)
+        results.append(r)
+        emit(f"simcore/azure_full/{n}fns/heap_events_per_s",
+             r["heap_events_per_s"],
+             f"inv={r['invocations']} wall={r['wall_s']:.2f}s "
+             f"rss={r['peak_rss_mb']:.0f}MB", units="per_s")
+        emit(f"simcore/azure_full/{n}fns/peak_rss_mb", r["peak_rss_mb"],
+             f"streamed, record_cap=10k", units="mb")
     for r in check_cliff(results):
         print(f"WARNING: {r['functions']}-function scale runs at "
               f"{r['heap_events_per_s']:.0f} heap-events/s, below "
               f"{CLIFF_FRAC:.0%} of the sweep's best — per-scale cliff "
               "(O(n) dispatch path?)", file=sys.stderr)
+    for r, why in check_stress(results):
+        print(f"WARNING: {r['functions']}-function stress row: {why}",
+              file=sys.stderr)
     n0, h0 = scales[0]
     results.append(_batch_row(emit, n0, h0))
     _placement_row(emit)
@@ -216,20 +304,36 @@ def main() -> int:
 
     if smoke:
         results = run(emit, scales=(SMOKE_SCALE,),
+                      stress_scales=(SMOKE_STRESS,),
                       json_path="BENCH_simcore_smoke.json")
         eps = results[0]["events_per_s"]
+        ok = True
         if eps < SMOKE_FLOOR_EPS:
             print(f"FAIL: smoke throughput {eps:.0f} events/s is below the "
                   f"{SMOKE_FLOOR_EPS:.0f} floor — dispatch-path regression?")
-            return 1
-        print(f"ok: {eps:.0f} events/s >= {SMOKE_FLOOR_EPS:.0f} floor")
-        return 0
+            ok = False
+        stress = [r for r in results if r.get("stress")][0]
+        if stress["peak_rss_mb"] > SMOKE_RSS_MB:
+            print(f"FAIL: streamed {stress['functions']}-fn smoke row peaked "
+                  f"at {stress['peak_rss_mb']:.0f}MB RSS, over the "
+                  f"{SMOKE_RSS_MB:.0f}MB bound — O(trace) memory regression?")
+            ok = False
+        if ok:
+            print(f"ok: {eps:.0f} events/s >= {SMOKE_FLOOR_EPS:.0f} floor; "
+                  f"streamed 10k-fn row rss={stress['peak_rss_mb']:.0f}MB "
+                  f"<= {SMOKE_RSS_MB:.0f}MB")
+        return 0 if ok else 1
     results = run(emit)
+    rc = 0
     if check_cliff(results):
         print(f"FAIL: per-scale throughput cliff (< {CLIFF_FRAC:.0%} of "
               "best heap-events/s) — see warnings above")
-        return 1
-    return 0
+        rc = 1
+    if check_stress(results):
+        print("FAIL: stress-tier gate (heap-events/s or peak RSS) — see "
+              "warnings above")
+        rc = 1
+    return rc
 
 
 if __name__ == "__main__":

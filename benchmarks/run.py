@@ -69,6 +69,10 @@ def main(argv=None) -> int:
                     help="run only the named module(s); repeatable")
     ap.add_argument("--json", metavar="PATH",
                     help="also write every row as a JSON list")
+    ap.add_argument("--budget-s", type=float, default=None, metavar="SECONDS",
+                    help="fail if any single module's wall time exceeds this "
+                         "(guards CI duration against e.g. a ballooning "
+                         "stress tier)")
     args = ap.parse_args(argv)
 
     if args.list_modules:
@@ -96,22 +100,34 @@ def main(argv=None) -> int:
                      "derived": derived})
 
     failed = []
+    walls = {}
     for name, mod in MODULES:
         if only and name not in only:
             continue
         t0 = time.perf_counter()
         try:
             mod.run(emit)
-            emit(f"_module/{name}/wall", (time.perf_counter() - t0) * 1e6,
-                 "ok")
+            walls[name] = time.perf_counter() - t0
+            emit(f"_module/{name}/wall", walls[name] * 1e6, "ok")
         except Exception:
             traceback.print_exc()
-            emit(f"_module/{name}/wall", (time.perf_counter() - t0) * 1e6,
-                 "ERROR")
+            walls[name] = time.perf_counter() - t0
+            emit(f"_module/{name}/wall", walls[name] * 1e6, "ERROR")
             failed.append(name)
     if args.json:
         with open(args.json, "w") as f:
             json.dump(rows, f, indent=1)
+    # per-module wall summary (slowest first) — the CI-duration ledger
+    for name in sorted(walls, key=walls.get, reverse=True):
+        print(f"module wall: {name:12s} {walls[name]:8.2f}s", file=sys.stderr)
+    if args.budget_s is not None:
+        over = {n: w for n, w in walls.items() if w > args.budget_s}
+        for n, w in over.items():
+            print(f"FAIL: module {n} took {w:.1f}s, over the "
+                  f"--budget-s {args.budget_s:.0f}s per-module cap",
+                  file=sys.stderr)
+            if n not in failed:
+                failed.append(n)
     if failed:
         print(f"FAILED modules: {', '.join(failed)}", file=sys.stderr)
     return 1 if failed else 0

@@ -157,6 +157,13 @@ def check_supported(scenario, suite, trace, worker_speed) -> None:
     """Raise :class:`BatchUnsupportedPolicy` naming every feature of the
     cell the static batch model cannot represent."""
     reasons = []
+    from repro.core.workload import InvocationStream
+    if isinstance(trace, InvocationStream):
+        reasons.append(
+            "streamed traces (the batch driver builds dense per-step "
+            "tables from the full invocation list; call "
+            "workload.materialize(stream) first, or run with driver='sim', "
+            "which consumes streams with bounded memory)")
     if suite.prewarm is not None:
         reasons.append(f"prewarm policy ({suite.prewarm.name})")
     if suite.startup.pause_pool_size:

@@ -822,6 +822,21 @@ class PolicyDriver:
         # function -> [(t_expired, container_id, weighted_idle_s)] pending
         self._rl_tombstones: Dict[str, List[Tuple[float, int, float]]] = \
             defaultdict(list)
+        # "is the keep-alive an RLKeepAlive?" is asked on every arrival /
+        # reuse / expire; cache the answer per keep-alive object (identity
+        # refresh handles suites swapped mid-run) so the hot path pays no
+        # per-event module import + isinstance
+        self._ka_cache: object = object()
+        self._ka_is_rl = False
+
+    def _rl_keepalive(self):
+        """The suite's keep-alive iff it is an RLKeepAlive, else None."""
+        ka = self.suite.keepalive
+        if ka is not self._ka_cache:
+            from repro.core.policies.prewarm import RLKeepAlive
+            self._ka_cache = ka
+            self._ka_is_rl = isinstance(ka, RLKeepAlive)
+        return ka if self._ka_is_rl else None
 
     # ------------------------------------------------------------------ #
     @property
@@ -830,15 +845,14 @@ class PolicyDriver:
         return pw.tick_interval if pw is not None else None
 
     def observe_arrival(self, function: str, now: float) -> None:
-        from repro.core.policies.prewarm import RLKeepAlive
         if self.suite.prewarm is not None:
             self.suite.prewarm.observe(function, now)
         lt = getattr(self.suite, "lifetime", None)
         if lt is not None:
             lt.observe(function, now)
-        ka = self.suite.keepalive
-        if isinstance(ka, RLKeepAlive):
-            ka.note_arrival(function, now)
+        rl = self._rl_keepalive()
+        if rl is not None:
+            rl.note_arrival(function, now)
 
     # ------------------------------------------------------------------ #
     def ttl_for(self, container: Container, ctx: ClusterContext) -> float:
@@ -886,11 +900,10 @@ class PolicyDriver:
 
     def on_reuse(self, container: Container, ctx: ClusterContext,
                  idle_s: float) -> None:
-        from repro.core.policies.prewarm import RLKeepAlive
-        ka = self.suite.keepalive
-        ka.on_reuse(container, ctx)
-        if isinstance(ka, RLKeepAlive):
-            ka.resolve(container.id, idle_s=idle_s, missed=False)
+        self.suite.keepalive.on_reuse(container, ctx)
+        rl = self._rl_keepalive()
+        if rl is not None:
+            rl.resolve(container.id, idle_s=idle_s, missed=False)
         self._resolve_rl_tombstone(container.function, ctx.now, missed=False)
 
     def on_miss(self, function: str, now: float) -> None:
@@ -903,25 +916,22 @@ class PolicyDriver:
         the retention decision *worked* (cheap resume instead of a full
         cold start): resolve the container's pending RL decision as a hit,
         with the idle cost weighted by the tier it waited in."""
-        from repro.core.policies.prewarm import RLKeepAlive
-        ka = self.suite.keepalive
-        if isinstance(ka, RLKeepAlive):
-            ka.resolve(container.id,
+        rl = self._rl_keepalive()
+        if rl is not None:
+            rl.resolve(container.id,
                        idle_s=idle_s * self._tier_frac(tier), missed=False)
         self._resolve_rl_tombstone(container.function, ctx.now, missed=False)
 
     def on_expire(self, container: Container, now: float, idle_s: float,
                   tier: WarmthTier = WarmthTier.WARM_IDLE) -> None:
-        from repro.core.policies.prewarm import RLKeepAlive
-        if isinstance(self.suite.keepalive, RLKeepAlive):
+        if self._rl_keepalive() is not None:
             self._rl_tombstones[container.function].append(
                 (now, container.id, idle_s * self._tier_frac(tier)))
 
     def _resolve_rl_tombstone(self, function: str, now: float, *,
                               missed: bool) -> None:
-        from repro.core.policies.prewarm import RLKeepAlive
-        ka = self.suite.keepalive
-        if not isinstance(ka, RLKeepAlive):
+        ka = self._rl_keepalive()
+        if ka is None:
             return
         stones = self._rl_tombstones.get(function)
         if not stones:

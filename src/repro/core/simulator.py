@@ -24,7 +24,16 @@ module only owns the event heap, the request queue, and the pause-pool /
 prewarm orchestration.  The fleet (``repro.fleet.loadgen``) drives the same
 kernel by clock, which is what keeps sim-vs-fleet calibration exact.
 
-The simulator is deterministic given (trace, suite, cost model).
+The simulator is deterministic given (trace, suite, cost model), and the
+trace may be EITHER a materialized :class:`~repro.core.workload.Trace` or
+a bounded-memory :class:`~repro.core.workload.StreamedTrace`: arrivals are
+merged into the event heap incrementally (exactly one trace arrival is
+in-heap at any moment, pulled from the stream cursor as its predecessor
+pops), so peak memory is O(live cluster state + armed timers), never
+O(trace).  Heap keys are ``(time, rank, seq)`` with trace arrivals at rank
+0 — the same tie-break order the materialized pre-load produced — so a
+stream and its materialized twin replay bit-identically (gated in
+``tests/test_workload.py``).
 """
 from __future__ import annotations
 
@@ -32,7 +41,7 @@ import heapq
 import itertools
 from collections import defaultdict, deque
 from dataclasses import dataclass, field
-from typing import Deque, Dict, List, Optional, Sequence, Union
+from typing import Deque, Dict, Iterator, List, Optional, Sequence, Union
 
 from repro.core.cluster import (ClusterContext, ClusterState, PolicyDriver,
                                 find_worker, scale_breakdown)
@@ -42,7 +51,7 @@ from repro.core.lifecycle import (Breakdown, Container, FunctionSpec, Phase,
                                   WarmthTier)
 from repro.core.metrics import QoSLedger
 from repro.core.policies.base import PolicySuite
-from repro.core.workload import Invocation, Trace
+from repro.core.workload import Invocation, InvocationStream, Trace
 
 # the policy-facing view is the shared Context protocol; the name SimContext
 # survives for the policy/predictor docstrings and type hints that grew up
@@ -60,6 +69,12 @@ class SimConfig:
     sanitize_cost_s: float = 0.004
     rl_miss_window_s: float = 60.0
     max_queue: int = 100_000
+    # trace-scale memory levers: cap the ledger's per-request record list
+    # (aggregates + deterministic reservoir percentiles past the cap — see
+    # QoSLedger.record_cap) and drop the per-cold-start Breakdown log.
+    # Defaults preserve exact historical behavior.
+    ledger_record_cap: Optional[int] = None
+    keep_phase_log: bool = True
 
 
 @dataclass
@@ -69,7 +84,8 @@ class _Pending:
 
 
 class Simulator:
-    def __init__(self, trace: Trace, suite: PolicySuite,
+    def __init__(self, trace: Union[Trace, InvocationStream],
+                 suite: PolicySuite,
                  cost_model: Optional[CostModel] = None,
                  cfg: Optional[SimConfig] = None,
                  events: Optional[EventLog] = None):
@@ -83,7 +99,8 @@ class Simulator:
             num_workers=self.cfg.num_workers,
             worker_memory_mb=self.cfg.worker_memory_mb,
             worker_speed=self.cfg.worker_speed,
-            ledger=QoSLedger(horizon=trace.horizon),
+            ledger=QoSLedger(horizon=trace.horizon,
+                             record_cap=self.cfg.ledger_record_cap),
             tier_footprint_frac=self.cost_model.tier_footprint_frac,
             events=events)
         self.state.ledger.cluster_capacity_gb = self.state.capacity_gb
@@ -100,6 +117,18 @@ class Simulator:
         self.phase_log: List[Breakdown] = []
         self.events_processed = 0         # heap events popped (true
                                           # simulator work; see bench_simcore)
+        # incremental arrival cursor: exactly one rank-0 trace arrival is
+        # in-heap at a time; the next is pulled when it pops.  seq for
+        # rank-0 entries is the stream index, reproducing the tie-break
+        # order the old pre-load (seq 0..n-1) produced.
+        self._arrival_iter: Optional[Iterator[Invocation]] = None
+        self._arr_idx = 0
+        self._last_arrival_t = float("-inf")
+        # one reusable policy-facing context: it reads cluster state
+        # dynamically, so per-dispatch reallocation was pure churn
+        self._ctx_obj = ClusterContext(
+            self.state, self.cost_model, self.suite,
+            queued=self._queued_count.__getitem__)
 
     # ---- kernel views (back-compat with pre-kernel attribute names) ---- #
     @property
@@ -123,18 +152,36 @@ class Simulator:
         return self.state.snapshots
 
     def _ctx(self) -> ClusterContext:
-        return ClusterContext(self.state, self.cost_model, self.suite,
-                              queued=self._queued_count.__getitem__)
+        return self._ctx_obj
 
     # ------------------------------------------------------------------ #
     # event plumbing
     # ------------------------------------------------------------------ #
     def _push(self, t: float, kind: str, payload=None):
-        heapq.heappush(self._events, (t, next(self._seq), kind, payload))
+        # rank 1: dynamic events (ticks, exec_done, expire, chain arrivals,
+        # start_done, pool_refill) — always after same-time trace arrivals,
+        # exactly the order the old upfront pre-load produced
+        heapq.heappush(self._events, (t, 1, next(self._seq), kind, payload))
+
+    def _push_next_arrival(self) -> None:
+        """Advance the trace cursor: push the next arrival at rank 0 with
+        the stream index as tie-break (the pre-load's seq 0..n-1 order)."""
+        assert self._arrival_iter is not None
+        for inv in self._arrival_iter:
+            if inv.time < self._last_arrival_t:
+                raise ValueError(
+                    f"trace stream is not time-ordered: invocation at "
+                    f"t={inv.time} after t={self._last_arrival_t}")
+            self._last_arrival_t = inv.time
+            heapq.heappush(self._events,
+                           (inv.time, 0, self._arr_idx, "arrival",
+                            _Pending(inv, inv.time)))
+            self._arr_idx += 1
+            return
 
     def run(self) -> QoSLedger:
-        for inv in self.trace.invocations:
-            self._push(inv.time, "arrival", _Pending(inv, inv.time))
+        self._arrival_iter = iter(self.trace)
+        self._push_next_arrival()
         if self.suite.prewarm is not None:
             self._push(0.0, "tick", None)
         if self.suite.startup.pause_pool_size:
@@ -146,7 +193,9 @@ class Simulator:
                 self.state.reserve(w, footprint / self.cfg.num_workers)
 
         while self._events:
-            t, _, kind, payload = heapq.heappop(self._events)
+            t, rank, _, kind, payload = heapq.heappop(self._events)
+            if rank == 0:
+                self._push_next_arrival()   # refill the trace cursor
             self.events_processed += 1
             if t > self.trace.horizon and kind == "tick":
                 continue
@@ -242,7 +291,8 @@ class Simulator:
             fn, tier, concurrent_colds=self.state.provisioning_on(worker),
             deps_fraction=st.deps_fraction, from_pause_pool=from_pool)
         bd = scale_breakdown(bd, self.state.speed(worker))
-        self.phase_log.append(bd)
+        if self.cfg.keep_phase_log:
+            self.phase_log.append(bd)
         c = self.state.admit(fn.name, worker, self.now,
                              has_snapshot=tier == WarmthTier.SNAPSHOT_READY,
                              tier=tier)
@@ -261,7 +311,8 @@ class Simulator:
         bd = self.cost_model.promote_breakdown(
             fn, tier, concurrent_colds=self.state.provisioning_on(c.worker))
         bd = scale_breakdown(bd, self.state.speed(c.worker))
-        self.phase_log.append(bd)
+        if self.cfg.keep_phase_log:
+            self.phase_log.append(bd)
         self.policy.on_promote(c, self._ctx(), idle_s, tier)
         self.state.promote_begin(c, self.now)
         if self.events is not None:
@@ -401,7 +452,7 @@ class Simulator:
                 self._queued_count[fn_name] += 1
 
 
-def simulate(trace: Trace, suite: PolicySuite, *,
+def simulate(trace: Union[Trace, InvocationStream], suite: PolicySuite, *,
              cost_model: Optional[CostModel] = None,
              cfg: Optional[SimConfig] = None,
              events: Optional[EventLog] = None) -> QoSLedger:

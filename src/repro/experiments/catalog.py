@@ -182,6 +182,29 @@ for label, sc in [
     CALIBRATION[label] = register(sc)
 
 # --------------------------------------------------------------------------- #
+# trace-scale stress cells (ROADMAP item 2): streamed azure_full sources —
+# the sim driver consumes them with bounded memory (the trace cache is
+# bypassed, arrivals merge into the heap incrementally); bench_simcore's
+# stress tier measures heap-events/s and peak RSS at these scales
+# --------------------------------------------------------------------------- #
+AZURE_10K = _w("azure_full", "azure_10k", seed=2019, horizon=600.0,
+               num_functions=10_000, rate_per_s=100.0)
+AZURE_50K = _w("azure_full", "azure_50k", seed=2019, horizon=600.0,
+               num_functions=50_000, rate_per_s=150.0)
+STRESS_CLUSTER = ClusterSpec(num_workers=8, worker_memory_mb=2_000_000.0)
+
+register(Scenario(
+    name="stress/azure10k", workload=AZURE_10K, policy="provider_default",
+    cluster=STRESS_CLUSTER,
+    description="10k-function streamed azure_full replay (bench_simcore "
+                "stress tier; ~100 arrivals/s Zipf + diurnal)"))
+register(Scenario(
+    name="stress/azure50k", workload=AZURE_50K, policy="provider_default",
+    cluster=STRESS_CLUSTER,
+    description="50k-function streamed azure_full replay — the SPES-scale "
+                "regime; memory stays O(live containers), never O(trace)"))
+
+# --------------------------------------------------------------------------- #
 # sweeps (the grids the benchmark tables iterate)
 # --------------------------------------------------------------------------- #
 CSF_POLICIES = ("cold_always", "provider_default", "faascache", "lcs",

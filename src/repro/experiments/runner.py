@@ -44,6 +44,12 @@ _TRACE_CACHE_MAX = 32
 
 
 def build_trace(scenario: Scenario):
+    from repro.core.workload import STREAMING_GENERATORS
+    if scenario.workload.generator in STREAMING_GENERATORS:
+        # streamed sources are lazy handles (cheap to rebuild, re-iterable,
+        # deterministic per pass) — caching one would pin nothing useful
+        # and the LRU must never hold a multi-day iterator's state
+        return scenario.trace()
     key = json.dumps({"w": scenario.workload.to_dict(),
                       "seed": scenario.seed}, sort_keys=True)
     if key in _TRACE_CACHE:

@@ -137,7 +137,10 @@ class FleetRunner:
     # ------------------------------------------------------------------ #
     def run(self) -> QoSLedger:
         rng = np.random.default_rng(self.cfg.seed)
-        for inv in self.trace.invocations:
+        # streams iterate lazily too; the fleet driver still enqueues all
+        # arrivals upfront (it replays by clock), so only the scalar sim
+        # offers the bounded-memory path — but a StreamedTrace works here
+        for inv in self.trace:
             self._push(inv.time, "arrival",
                        self._mk_request(inv.function, inv.time, inv.chain, rng))
         if self.autoscaler.tick_interval is not None:
