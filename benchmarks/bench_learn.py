@@ -1,0 +1,132 @@
+"""Learned predictors vs their classical baselines — the repro.learn gate.
+
+Two claims, both against like-for-like comparators (the learned component
+is the ONLY thing that differs):
+
+* **Forecaster Pareto gate** — the ``learn_pareto`` sweep replays the
+  identical FixedTTL(60)+PredictivePrewarm suite with the histogram
+  predictor vs the trained transformer (``prewarm_histogram`` vs
+  ``prewarm_transformer``) over four workloads.  Gate: the transformer
+  suite *strictly dominates* the histogram suite — cold-start count
+  strictly lower at equal-or-lower idle GB-s — on at least
+  ``GATE_MIN_WORKLOADS`` of them.  The cron_spikes cells carry the
+  signal the histogram structurally cannot see: a deterministic
+  once-per-cycle early re-fire whose short gap sits below the
+  histogram's interpolated p05 (spike mass < 5%), but is phase-locked to
+  wall-clock features the transformer conditions on.
+
+* **DRL agent gate** — the DQN's exported static schedule
+  (``checkpoints/keepalive_schedule.json``), replayed on the training
+  grid's gym, must earn a strictly higher episode reward
+  (−cold − 0.05·idle GB-s) than the flat 120 s dwell — the midpoint the
+  batch driver used to pin RLLadder to before learned schedules existed.
+  Every fixed action's reward is emitted alongside for context.
+
+Results land in ``BENCH_learn.json``.  Both gates need trained
+checkpoints (``scripts/train_predictors.py``); the module fails loudly
+when they are missing rather than silently comparing the fallback
+predictor to itself.
+"""
+import json
+
+GATE_MIN_WORKLOADS = 2
+GATE_WORKLOADS = ("cron_a", "cron_b", "azure", "rare")
+BASELINE_TTL = 120.0        # the retired batch-driver RLLadder pin
+
+
+def _require_checkpoints():
+    from repro.core.policies.lifetime import load_keepalive_schedule
+    from repro.learn.forecaster import resolve_checkpoint
+    missing = []
+    if resolve_checkpoint() is None:
+        missing.append("forecaster (checkpoints/forecaster.npz)")
+    if load_keepalive_schedule() is None:
+        missing.append("keep-alive schedule "
+                       "(checkpoints/keepalive_schedule.json)")
+    if missing:
+        raise RuntimeError(
+            "bench_learn needs trained checkpoints: " + "; ".join(missing)
+            + " — run PYTHONPATH=src python scripts/train_predictors.py")
+
+
+def run(emit):
+    from repro.core.policies.lifetime import load_keepalive_schedule
+    from repro.experiments import run_sweep
+    from repro.learn.agent import evaluate_schedule
+    from repro.learn.gym import BatchSimGym, training_scenarios
+
+    _require_checkpoints()
+    out = {"pareto": {}, "drl": {}}
+
+    # ---- forecaster Pareto gate -------------------------------------- #
+    results = {}
+    for sc, s in run_sweep("learn_pareto"):
+        results.setdefault(sc.workload.label, {})[sc.policy] = s
+        emit(f"learn/{sc.workload.label}/{sc.policy}/cold_starts",
+             s["cold_starts"],
+             f"cold%={s['cold_start_frequency'] * 100:.2f} "
+             f"idle_gb_s={s['idle_gb_s']:.1f}", units="count")
+
+    dominated = []
+    for wname in GATE_WORKLOADS:
+        res = results[wname]
+        tr, hist = res["prewarm_transformer"], res["prewarm_histogram"]
+        wins = (tr["cold_starts"] < hist["cold_starts"]
+                and tr["idle_gb_s"] <= hist["idle_gb_s"])
+        dominated.append(wins)
+        out["pareto"][wname] = {
+            "transformer": {"cold_starts": tr["cold_starts"],
+                            "idle_gb_s": tr["idle_gb_s"]},
+            "histogram": {"cold_starts": hist["cold_starts"],
+                          "idle_gb_s": hist["idle_gb_s"]},
+            "dominates": wins,
+        }
+        emit(f"learn/{wname}/transformer_dominates", float(wins),
+             f"{'ok' if wins else 'no'} "
+             f"cold={tr['cold_starts']:.0f}-vs-{hist['cold_starts']:.0f} "
+             f"idle={tr['idle_gb_s']:.0f}-vs-{hist['idle_gb_s']:.0f}",
+             units="bool")
+    n_dom = sum(dominated)
+    out["pareto"]["workloads_dominated"] = n_dom
+
+    # ---- DRL agent gate ---------------------------------------------- #
+    sched = load_keepalive_schedule()
+    gym = BatchSimGym(training_scenarios())
+    learned = evaluate_schedule(gym, sched["warm_s"],
+                                default_s=sched.get("default_s", 120.0))
+    baselines = gym.baseline_rewards()
+    for a, v in sorted(baselines.items()):
+        emit(f"learn/gym/fixed_ttl_{a:g}/reward", v["reward"],
+             f"cold={v['cold_starts']:.0f} idle={v['idle_gb_s']:.0f}",
+             units="reward")
+    base = baselines[BASELINE_TTL]
+    agent_wins = learned["reward"] > base["reward"]
+    emit("learn/gym/exported_schedule/reward", learned["reward"],
+         f"{'ok' if agent_wins else 'FAIL'} "
+         f"vs fixed-{BASELINE_TTL:g}s {base['reward']:.1f} "
+         f"cold={learned['cold_starts']:.0f} "
+         f"idle={learned['idle_gb_s']:.0f}", units="reward")
+    out["drl"] = {"exported": learned,
+                  "baselines": {f"{a:g}": v for a, v in baselines.items()},
+                  "baseline_ttl_s": BASELINE_TTL,
+                  "beats_baseline": agent_wins}
+
+    with open("BENCH_learn.json", "w") as fh:
+        json.dump(out, fh, indent=1, sort_keys=True)
+
+    assert n_dom >= GATE_MIN_WORKLOADS, (
+        f"transformer suite dominated the histogram suite on only "
+        f"{n_dom}/{len(GATE_WORKLOADS)} workloads "
+        f"(gate: >= {GATE_MIN_WORKLOADS})")
+    assert agent_wins, (
+        f"exported DQN schedule reward {learned['reward']:.1f} does not "
+        f"beat the fixed {BASELINE_TTL:g}s baseline {base['reward']:.1f}")
+
+
+if __name__ == "__main__":
+    try:
+        from benchmarks.emit import csv_emit
+    except ImportError:
+        from emit import csv_emit
+
+    run(csv_emit)

@@ -19,6 +19,9 @@ values no longer need ``* 1e8``-style scale hacks — rows default to
   bench_batchsim   batch-vs-scalar sweep throughput: the vectorized-grid
                    50x gate on a dense 64-cell grid + the batch-vs-sim
                    tolerance spot-check (writes BENCH_batchsim.json)
+  bench_learn      learned predictors: trained transformer forecaster vs
+                   histogram Pareto gate + DQN keep-alive schedule vs
+                   fixed TTL (writes BENCH_learn.json)
   bench_roofline   dry-run/roofline summary (deliverables e+g)
 
 The simulated modules are thin declarations over the scenario registry
@@ -38,7 +41,7 @@ import time
 import traceback
 
 from benchmarks import (bench_batchsim, bench_csf, bench_csl, bench_factors,
-                        bench_fleet, bench_platforms, bench_qos,
+                        bench_fleet, bench_learn, bench_platforms, bench_qos,
                         bench_roofline, bench_serving, bench_simcore,
                         bench_tiers, bench_tradeoffs)
 from benchmarks.emit import csv_emit
@@ -55,6 +58,7 @@ MODULES = [
     ("tiers", bench_tiers),
     ("simcore", bench_simcore),
     ("batchsim", bench_batchsim),
+    ("learn", bench_learn),
     ("roofline", bench_roofline),
 ]
 

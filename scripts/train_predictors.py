@@ -1,0 +1,196 @@
+#!/usr/bin/env python
+"""Train both repro.learn predictors end-to-end and export their
+checkpoints.
+
+    PYTHONPATH=src python scripts/train_predictors.py            # full run
+    PYTHONPATH=src python scripts/train_predictors.py --smoke    # CI smoke
+
+The full run writes versioned artifacts the serving side discovers:
+
+    checkpoints/forecaster-v{V}.npz          transformer gap forecaster
+    checkpoints/forecaster.npz               (discovery copy)
+    checkpoints/keepalive_schedule-v{V}.json DQN greedy export
+    checkpoints/keepalive_schedule.json      (discovery copy)
+    checkpoints/metrics.json                 training curves + eval numbers
+
+``--smoke`` trains a tiny model for a few hundred steps into a temp dir,
+asserts the loss decreased and the checkpoint round-trips, runs a
+three-episode DQN on a one-cell gym, and exits nonzero on any failure —
+cheap enough for CI, touching every layer of the pipeline.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+import tempfile
+import time
+
+
+def train_forecaster_full(out: str, *, steps: int, master_seed: int,
+                          log_fn=print) -> dict:
+    from repro.learn.dataset import batches, build_examples, training_traces
+    from repro.learn.features import FeatureConfig
+    from repro.learn.forecaster import (CHECKPOINT_VERSION, save_forecaster,
+                                        train_forecaster)
+
+    feat = FeatureConfig()
+    t0 = time.perf_counter()
+    examples = build_examples(training_traces(master_seed), feat,
+                              master_seed=master_seed)
+    log_fn(f"[forecaster] {len(examples['y'])} training examples")
+    it = batches(examples, 256, master_seed=master_seed)
+    params, res, cfg, feat = train_forecaster(
+        it, steps=steps, feat=feat, log_every=max(steps // 10, 1),
+        log_fn=log_fn)
+    metrics = {
+        "steps": steps,
+        "examples": int(len(examples["y"])),
+        "first_loss": res.losses[0],
+        "final_loss": res.losses[-1],
+        "wall_s": time.perf_counter() - t0,
+    }
+    versioned = os.path.join(out, f"forecaster-v{CHECKPOINT_VERSION}.npz")
+    save_forecaster(versioned, params, cfg, feat, metrics=metrics)
+    shutil.copyfile(versioned, os.path.join(out, "forecaster.npz"))
+    log_fn(f"[forecaster] saved {versioned} "
+           f"(loss {metrics['first_loss']:.4f} -> {metrics['final_loss']:.4f})")
+    return metrics
+
+
+def train_agent_full(out: str, *, episodes: int, seed: int,
+                     log_fn=print) -> dict:
+    from repro.learn.agent import (SCHEDULE_VERSION, export_schedule,
+                                   save_schedule, train_agent)
+    from repro.learn.gym import BatchSimGym, training_scenarios
+
+    t0 = time.perf_counter()
+    gym = BatchSimGym(training_scenarios())
+    params, history = train_agent(gym, episodes=episodes, seed=seed,
+                                  log_fn=log_fn)
+    schedule, exported, method = export_schedule(gym, params, log_fn=log_fn)
+    baselines = {f"{a:g}": gym.baseline_rewards()[a] for a in gym.actions}
+    metrics = {
+        "episodes": episodes,
+        "exported": exported,
+        "export_method": method,
+        "baselines": baselines,
+        "final_episode": history[-1],
+        "wall_s": time.perf_counter() - t0,
+    }
+    versioned = os.path.join(out,
+                             f"keepalive_schedule-v{SCHEDULE_VERSION}.json")
+    save_schedule(versioned, schedule,
+                  meta={"episodes": episodes, "seed": seed,
+                        "method": method,
+                        "reward": exported["reward"]})
+    shutil.copyfile(versioned, os.path.join(out, "keepalive_schedule.json"))
+    ttl120 = baselines["120"]["reward"]
+    log_fn(f"[agent] exported reward {exported['reward']:.1f} "
+           f"vs fixed-TTL-120 {ttl120:.1f} "
+           f"({'beats' if exported['reward'] > ttl120 else 'LOSES TO'} "
+           "the old batch-driver pin)")
+    return metrics
+
+
+def run_full(args) -> int:
+    os.makedirs(args.out, exist_ok=True)
+    # --skip-* reruns merge into the existing ledger instead of dropping
+    # the other predictor's numbers
+    path = os.path.join(args.out, "metrics.json")
+    metrics = {}
+    if os.path.exists(path):
+        with open(path) as fh:
+            metrics = json.load(fh)
+    if not args.skip_forecaster:
+        metrics["forecaster"] = train_forecaster_full(
+            args.out, steps=args.steps, master_seed=args.seed + 7)
+    if not args.skip_agent:
+        metrics["agent"] = train_agent_full(
+            args.out, episodes=args.episodes, seed=args.seed)
+    with open(path, "w") as fh:
+        json.dump(metrics, fh, indent=1, sort_keys=True)
+    print(f"wrote {path}")
+    return 0
+
+
+def run_smoke(args) -> int:
+    """Tiny end-to-end pass: loss must drop, checkpoints must round-trip,
+    the gym must train and export."""
+    import numpy as np
+
+    from repro.learn.agent import (DQNConfig, evaluate_schedule,
+                                   greedy_schedule, train_agent)
+    from repro.learn.dataset import batches, build_examples, training_traces
+    from repro.learn.dataset import TRAIN_MIX
+    from repro.learn.features import FeatureConfig
+    from repro.learn.forecaster import (load_forecaster, model_config,
+                                        save_forecaster, train_forecaster)
+    from repro.learn.gym import BatchSimGym, training_scenarios
+    from repro.training.checkpoint import tree_equal
+
+    out = tempfile.mkdtemp(prefix="repro-learn-smoke-")
+    feat = FeatureConfig()
+    mix = [m for m in TRAIN_MIX if m[0] in ("cron_fast", "azure_a")]
+    examples = build_examples(training_traces(7, mix), feat)
+    cfg = model_config(num_layers=1, d_model=16, num_heads=2, d_ff=32)
+    params, res, cfg, feat = train_forecaster(
+        batches(examples, 32), steps=args.steps, cfg=cfg, feat=feat,
+        log_every=50)
+    assert res.losses[-1] < res.losses[0], \
+        f"forecaster loss did not decrease: {res.losses[0]:.4f} -> " \
+        f"{res.losses[-1]:.4f}"
+    ckpt = os.path.join(out, "forecaster.npz")
+    save_forecaster(ckpt, params, cfg, feat)
+    params2, cfg2, feat2, _ = load_forecaster(ckpt)
+    assert tree_equal(params, params2), "checkpoint round-trip drifted"
+    assert feat2 == feat
+
+    os.environ["REPRO_FORECASTER_CKPT"] = ckpt
+    from repro.core.predictors.transformer import TransformerPredictor
+    pred = TransformerPredictor()
+    for t in (0.0, 120.0, 241.0):
+        pred.observe(t)
+    lo, hi = pred.window()
+    assert lo < hi and lo > 241.0, f"degenerate window ({lo}, {hi})"
+
+    gym = BatchSimGym(training_scenarios(seeds=(1,), num_functions=6,
+                                         horizon=300.0))
+    qp, _ = train_agent(gym, episodes=3, seed=0,
+                        cfg=DQNConfig(batch_size=64, buffer_size=5000),
+                        log_every=1)
+    schedule = greedy_schedule(gym, qp)
+    assert schedule, "empty exported schedule"
+    ev = evaluate_schedule(gym, schedule)
+    assert np.isfinite(ev["reward"])
+    print(f"smoke ok: forecaster {res.losses[0]:.4f} -> "
+          f"{res.losses[-1]:.4f}, schedule {len(schedule)} fns, "
+          f"reward {ev['reward']:.1f}")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python scripts/train_predictors.py",
+        description="train the transformer forecaster + DQN keep-alive")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI pass into a temp dir (asserts loss drop "
+                         "and checkpoint round-trip)")
+    ap.add_argument("--out", default="checkpoints", metavar="DIR")
+    ap.add_argument("--steps", type=int, default=None,
+                    help="forecaster train steps (default 1500; smoke 200)")
+    ap.add_argument("--episodes", type=int, default=120,
+                    help="DQN episodes over the gym grid")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--skip-forecaster", action="store_true")
+    ap.add_argument("--skip-agent", action="store_true")
+    args = ap.parse_args(argv)
+    if args.steps is None:
+        args.steps = 200 if args.smoke else 1500
+    return run_smoke(args) if args.smoke else run_full(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

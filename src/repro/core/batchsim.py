@@ -50,11 +50,6 @@ from repro.core.policies.lifetime import (FixedLadder, KeepAliveLadder,
 DEFAULT_DT = 0.5          # fixed timestep (seconds); see docs/batchsim.md
 MIN_EDGES = 4             # schedule slots (a full ladder walk is 3 edges)
 
-# The RL ladder's warm dwell is chosen per-container by the Q-agent at
-# runtime; the batch approximation freezes it to the midpoint of the
-# agent's action space (QKeepAliveAgent.ACTIONS = 0/30/120/600/1800 s).
-RL_STATIC_WARM_S = 120.0
-
 
 class BatchUnsupportedPolicy(ValueError):
     """The scenario needs runtime-state-dependent decisions the static
@@ -180,6 +175,12 @@ def check_supported(scenario, suite, trace, worker_speed) -> None:
                                                           FixedTTL):
         reasons.append(
             f"adaptive keep-alive ladder ({lt.keepalive.name})")
+    if isinstance(lt, RLLadder) and lt.learned_warm_s is None:
+        reasons.append(
+            "online RL ladder (agent-chosen TTLs are runtime state; "
+            "export a trained schedule with scripts/train_predictors.py "
+            "and attach it via RLLadder.attach_schedule — or use the "
+            "'tiered_rl_learned' suite)")
     if any(fn.chain for fn in trace.functions.values()):
         reasons.append("chained invocations")
     if any(s != 1.0 for s in worker_speed):
@@ -208,18 +209,15 @@ def static_schedules(suite, cost_model, trace) \
     decision points the scalar run sees; the freeze keeps, per function,
     the modal tier-sequence with element-wise median dwells (not the
     fully-converged end-of-trace schedule, which systematically
-    over-estimates dwells on bursty traffic).  ``RLLadder``'s
-    agent-chosen warm dwell is pinned to ``RL_STATIC_WARM_S``.
+    over-estimates dwells on bursty traffic).  ``RLLadder`` is only
+    supported in its exported-schedule form (``attach_schedule``), where
+    ``schedule()`` is already a static per-function map the default path
+    replays verbatim; ``check_supported`` rejects the online form.
     """
     from collections import Counter
 
     lt = suite.lifetime
-    eff = copy.copy(suite)
-    if isinstance(lt, RLLadder):
-        eff.lifetime = FixedLadder(warm_s=RL_STATIC_WARM_S,
-                                   paused_s=lt.paused_s,
-                                   snapshot_s=lt.snapshot_s)
-    drv = PolicyDriver(eff,
+    drv = PolicyDriver(copy.copy(suite),
                        tier_footprint_frac=cost_model.tier_footprint_frac)
     out: Dict[str, List[Tuple[float, WarmthTier]]] = {}
     samples: Dict[str, list] = {}

@@ -9,11 +9,13 @@ from repro.core.policies.base import (Lifetime, Placement, PolicySuite,
                                       Startup)
 from repro.core.policies.keepalive import FixedTTL, GreedyDualKeepAlive, LCS
 from repro.core.policies.lifetime import (FixedLadder, KeepAliveLadder,
-                                          PredictiveLadder, RLLadder)
+                                          PredictiveLadder, RLLadder,
+                                          load_keepalive_schedule)
 from repro.core.policies.prewarm import (HybridPrewarm, PeriodicPing,
                                          RLKeepAlive, ewma_prewarm,
                                          histogram_prewarm, holt_prewarm,
-                                         lstm_prewarm, markov_prewarm)
+                                         lstm_prewarm, markov_prewarm,
+                                         transformer_prewarm)
 from repro.core.policies.scheduling import CASPlacement, ENSUREScaling
 
 
@@ -27,6 +29,11 @@ def _mk(name, **fields):
         f.update(kw)
         return PolicySuite(name=name, **f)
     return factory
+
+
+def _transformer_ladder() -> PredictiveLadder:
+    from repro.core.predictors.transformer import transformer_or_fallback
+    return PredictiveLadder(predictor_factory=transformer_or_fallback())
 
 
 _FACTORIES = {
@@ -62,6 +69,9 @@ _FACTORIES = {
                              prewarm=histogram_prewarm),
     "prewarm_lstm": _mk("prewarm_lstm", keepalive=lambda: FixedTTL(60.0),
                         prewarm=lstm_prewarm),
+    "prewarm_transformer": _mk("prewarm_transformer",
+                               keepalive=lambda: FixedTTL(60.0),
+                               prewarm=transformer_prewarm),
     "rl_keepalive": _mk("rl_keepalive", keepalive=RLKeepAlive),
     "cas": _mk("cas", keepalive=lambda: FixedTTL(600.0),
                placement=lambda: CASPlacement()),
@@ -76,6 +86,10 @@ _FACTORIES = {
     "tiered_spes": _mk("tiered_spes", keepalive=lambda: FixedTTL(600.0),
                        lifetime=lambda: PredictiveLadder(),
                        startup=Startup(img_cache=True)),
+    "tiered_transformer": _mk("tiered_transformer",
+                              keepalive=lambda: FixedTTL(600.0),
+                              lifetime=_transformer_ladder,
+                              startup=Startup(img_cache=True)),
     # --- beyond-paper hybrids -------------------------------------------- #
     "hybrid_prewarm": _mk("hybrid_prewarm", keepalive=lambda: FixedTTL(60.0),
                           prewarm=HybridPrewarm),
@@ -97,9 +111,34 @@ def _tiered_rl(**kw) -> PolicySuite:
     return PolicySuite(name="tiered_rl", **f)
 
 
+def _tiered_rl_learned(schedule_path=None, **kw) -> PolicySuite:
+    """RLLadder replaying a trained agent's exported per-function schedule
+    (``scripts/train_predictors.py`` -> ``checkpoints/keepalive_schedule
+    .json`` or ``$REPRO_KEEPALIVE_SCHEDULE``).  Fully deterministic — no
+    online agent — so the batch driver supports it.  Without an exported
+    schedule it degrades to the online ``tiered_rl`` suite with a warning
+    so CATALOG stays iterable on untrained machines."""
+    sched = load_keepalive_schedule(schedule_path)
+    if sched is None:
+        import warnings
+        warnings.warn(
+            "no exported keep-alive schedule found; tiered_rl_learned "
+            "falls back to the online tiered_rl agent (train one with "
+            "scripts/train_predictors.py)")
+        return _tiered_rl(**kw)
+    lt = RLLadder(FixedTTL(600.0))
+    lt.attach_schedule(sched["warm_s"], default_s=sched.get("default_s"))
+    f = dict(keepalive=FixedTTL(600.0), lifetime=lt,
+             startup=Startup(img_cache=True))
+    f.update(kw)
+    return PolicySuite(name="tiered_rl_learned", **f)
+
+
 _FACTORIES["tiered_rl"] = _tiered_rl
+_FACTORIES["tiered_rl_learned"] = _tiered_rl_learned
 
 CATALOG = tuple(_FACTORIES)
 
 __all__ = ["suite", "CATALOG", "PolicySuite", "Startup", "Lifetime",
-           "FixedLadder", "KeepAliveLadder", "PredictiveLadder", "RLLadder"]
+           "FixedLadder", "KeepAliveLadder", "PredictiveLadder", "RLLadder",
+           "load_keepalive_schedule"]

@@ -24,11 +24,36 @@ full ladder:
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional
+import json
+import os
+from typing import Callable, Dict, List, Optional
 
 from repro.core.lifecycle import Container, WarmthTier
 from repro.core.policies.base import KeepAlive, Lifetime, TierEdge
 from repro.core.predictors import HistogramPredictor
+
+
+KEEPALIVE_SCHEDULE_ENV = "REPRO_KEEPALIVE_SCHEDULE"
+DEFAULT_KEEPALIVE_SCHEDULE = os.path.join("checkpoints",
+                                          "keepalive_schedule.json")
+
+
+def load_keepalive_schedule(path: Optional[str] = None) -> Optional[dict]:
+    """Load an exported learned keep-alive schedule (explicit path >
+    ``$REPRO_KEEPALIVE_SCHEDULE`` > ``checkpoints/keepalive_schedule.json``).
+
+    Returns ``{"warm_s": {fn: dwell_s}, "default_s": float, ...}`` or
+    ``None`` when no file resolves."""
+    for cand in (path, os.environ.get(KEEPALIVE_SCHEDULE_ENV),
+                 DEFAULT_KEEPALIVE_SCHEDULE):
+        if cand and os.path.exists(cand):
+            with open(cand) as fh:
+                data = json.load(fh)
+            if "warm_s" not in data:
+                raise ValueError(f"{cand}: schedule missing 'warm_s' map")
+            data["warm_s"] = {k: float(v) for k, v in data["warm_s"].items()}
+            return data
+    return None
 
 
 class KeepAliveLadder(Lifetime):
@@ -84,18 +109,27 @@ class PredictiveLadder(Lifetime):
                  max_warm_s: float = 60.0, min_warm_s: float = 2.0,
                  death_factor: float = 1.5,
                  snapshot_linger_s: float = 1800.0,
-                 fallback: Optional[FixedLadder] = None):
+                 fallback: Optional[FixedLadder] = None,
+                 predictor_factory: Optional[Callable[[], object]] = None):
         self.latency_budget_s = latency_budget_s
         self.max_warm_s = max_warm_s
         self.min_warm_s = min_warm_s
         self.death_factor = death_factor
         self.snapshot_linger_s = snapshot_linger_s
         self.fallback = fallback or FixedLadder()
-        self.predictors: Dict[str, HistogramPredictor] = {}
-        self.name = f"spes({latency_budget_s * 1e3:g}ms)"
+        # any predictor speaking the histogram protocol (observe/window)
+        # drops in — e.g. the trained TransformerPredictor
+        self.predictor_factory = predictor_factory or HistogramPredictor
+        self.predictors: Dict[str, object] = {}
+        tag = getattr(self.predictor_factory, "name", None)
+        suffix = "" if self.predictor_factory is HistogramPredictor else \
+            f",{tag or 'learned'}"
+        self.name = f"spes({latency_budget_s * 1e3:g}ms{suffix})"
 
     def observe(self, function: str, t: float) -> None:
-        self.predictors.setdefault(function, HistogramPredictor()).observe(t)
+        if function not in self.predictors:
+            self.predictors[function] = self.predictor_factory()
+        self.predictors[function].observe(t)
 
     def schedule(self, container: Container, ctx) -> List[TierEdge]:
         pred = self.predictors.get(container.function)
@@ -140,17 +174,49 @@ class RLLadder(Lifetime):
     PAUSED and then SNAPSHOT_READY instead of dying — so a mispredicted
     TTL costs a ~10 ms resume, not a full cold start, and the reward the
     agent sees (tier-weighted idle seconds) reflects the cheaper parking.
+
+    A trained off-policy agent (``repro.learn.agent``) exports its greedy
+    policy as a static per-function warm-dwell map; once attached via
+    :meth:`attach_schedule`, ``schedule`` *replays* that map instead of
+    consulting the online keepalive — deterministically, in every driver.
+    The batch driver only supports RLLadder in this exported-schedule
+    form (``batchsim.check_supported``); without one it raises instead of
+    silently pinning a midpoint dwell.
     """
 
     def __init__(self, keepalive: KeepAlive, *, paused_s: float = 540.0,
-                 snapshot_s: float = 1800.0):
+                 snapshot_s: float = 1800.0,
+                 learned_warm_s: Optional[Dict[str, float]] = None,
+                 learned_default_s: Optional[float] = None):
         self.keepalive = keepalive
         self.paused_s = paused_s
         self.snapshot_s = snapshot_s
+        self.learned_warm_s = learned_warm_s
+        self.learned_default_s = learned_default_s
         self.name = f"rl_ladder({keepalive.name})"
+        if learned_warm_s is not None:
+            self.name = f"rl_ladder(learned,{len(learned_warm_s)}fns)"
+
+    def attach_schedule(self, warm_s: Dict[str, float],
+                        *, default_s: Optional[float] = None) -> None:
+        """Replay an exported learned schedule: per-function warm dwell in
+        seconds; unknown functions get ``default_s`` (median of the map
+        when omitted)."""
+        self.learned_warm_s = dict(warm_s)
+        if default_s is None and warm_s:
+            vals = sorted(warm_s.values())
+            default_s = vals[len(vals) // 2]
+        self.learned_default_s = default_s
+        self.name = f"rl_ladder(learned,{len(warm_s)}fns)"
 
     def schedule(self, container: Container, ctx) -> List[TierEdge]:
-        ttl = self.keepalive.ttl(container, ctx)
+        if self.learned_warm_s is not None:
+            ttl = self.learned_warm_s.get(
+                container.function,
+                self.learned_default_s if self.learned_default_s is not None
+                else 120.0)
+        else:
+            ttl = self.keepalive.ttl(container, ctx)
         if ttl == float("inf"):
             return []
         return [(ttl, WarmthTier.PAUSED),

@@ -88,6 +88,16 @@ def lstm_prewarm(**kw) -> PredictivePrewarm:
     return PredictivePrewarm(LSTMPredictor, name="lstm", **kw)
 
 
+def transformer_prewarm(checkpoint=None, **kw) -> PredictivePrewarm:
+    """The trained ``repro.learn`` forecaster behind the exact same
+    prewarm policy as ``histogram_prewarm`` — only the predictor differs,
+    which is what makes the bench_learn Pareto comparison apples-to-apples.
+    Falls back to the histogram when no checkpoint has been trained."""
+    from repro.core.predictors.transformer import transformer_or_fallback
+    return PredictivePrewarm(transformer_or_fallback(checkpoint),
+                             name="transformer", **kw)
+
+
 class HybridPrewarm(Prewarm):
     """Beyond-paper: histogram window for regular functions, falling back to
     Markov for irregular ones (chosen per function by dispersion)."""

@@ -1,8 +1,21 @@
 """Time-series predictors backing the AI/ML prewarm policies (§5.3.2,
-ATOM/MASTER/Fifer/FaaStest/HotC lineage)."""
+ATOM/MASTER/Fifer/FaaStest/HotC lineage).
+
+``LSTMPredictor`` and ``TransformerPredictor`` (the learned family) are
+resolved lazily — importing this package must not pull in JAX."""
 from repro.core.predictors.ewma import EWMAPredictor, ExpSmoothingPredictor
 from repro.core.predictors.markov import MarkovPredictor
 from repro.core.predictors.histogram import HistogramPredictor
 
 __all__ = ["EWMAPredictor", "ExpSmoothingPredictor", "MarkovPredictor",
-           "HistogramPredictor"]
+           "HistogramPredictor", "LSTMPredictor", "TransformerPredictor"]
+
+
+def __getattr__(name):
+    if name == "LSTMPredictor":
+        from repro.core.predictors.lstm import LSTMPredictor
+        return LSTMPredictor
+    if name == "TransformerPredictor":
+        from repro.core.predictors.transformer import TransformerPredictor
+        return TransformerPredictor
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,131 @@
+"""Serving side of the trained transformer gap forecaster.
+
+``TransformerPredictor`` speaks the same protocol as
+:class:`~repro.core.predictors.histogram.HistogramPredictor`
+(``observe`` / ``predict_next`` / ``window`` / ``uncertainty``) but reads
+its (q05, q50, q95) next-gap quantiles from a ``repro.learn`` checkpoint,
+so every policy that consumes the histogram today — ``PredictivePrewarm``,
+``PredictiveLadder`` — can swap in the learned forecaster unchanged.
+
+Two properties matter for simulator throughput:
+
+* **one model per checkpoint** — params and the jitted forward are cached
+  module-wide, so thousands of per-function predictor instances share one
+  compiled (1, window, features) forward;
+* **lazy inference** — the forward runs at most once per *observation*
+  (predictions are cached until the next arrival), never per policy tick.
+
+Unlike the histogram (which needs >= 3 gaps before it can emit a window
+and reports infinite uncertainty until then — forcing the prewarm policy
+into its always-warm fallback), the forecaster emits a calibrated window
+from the *first* observed gap.
+"""
+from __future__ import annotations
+
+import warnings
+from collections import deque
+from typing import Callable, Dict, Optional, Tuple
+
+import numpy as np
+
+# path -> (jitted forward, params, ModelConfig, FeatureConfig); shared by
+# every predictor instance so the compile + weights load happen once
+_MODEL_CACHE: Dict[str, tuple] = {}
+_WARNED_FALLBACK = False
+
+
+def _load(path: str):
+    if path not in _MODEL_CACHE:
+        import jax
+        from repro.learn.forecaster import apply_forecaster, load_forecaster
+        params, cfg, feat, _ = load_forecaster(path)
+        fwd = jax.jit(lambda p, x: apply_forecaster(p, x, cfg))
+        _MODEL_CACHE[path] = (fwd, params, cfg, feat)
+    return _MODEL_CACHE[path]
+
+
+class TransformerPredictor:
+    name = "transformer"
+
+    def __init__(self, checkpoint: Optional[str] = None):
+        from repro.learn.forecaster import resolve_checkpoint
+        path = resolve_checkpoint(checkpoint)
+        if path is None:
+            raise FileNotFoundError(
+                "no trained forecaster checkpoint (looked for "
+                f"{checkpoint!r}, $REPRO_FORECASTER_CKPT, "
+                "checkpoints/forecaster.npz); train one with "
+                "scripts/train_predictors.py")
+        self._fwd, self._params, self._cfg, self._feat = _load(path)
+        W = self._feat.window
+        self.gaps: deque = deque(maxlen=W)
+        self.ends: deque = deque(maxlen=W)
+        self.last_t: Optional[float] = None
+        self._cached: Optional[Tuple[float, float, float]] = None
+
+    def observe(self, t: float) -> None:
+        if self.last_t is not None and t > self.last_t:
+            self.gaps.append(t - self.last_t)
+            self.ends.append(t)
+            self._cached = None
+        self.last_t = t
+
+    # ------------------------------------------------------------------ #
+    def _predict(self) -> Optional[Tuple[float, float, float]]:
+        """(q05, q50, q95) *gap* quantiles in seconds, cached per arrival."""
+        if self._cached is None:
+            if not self.gaps:
+                return None
+            from repro.learn.features import encode_window
+            x = encode_window(list(self.gaps), list(self.ends),
+                              self._feat)[None]
+            q = np.asarray(self._fwd(self._params, x))[0]
+            g = np.expm1(np.clip(q, 0.0, self._feat.log_clip))
+            g50 = max(float(g[1]), 1e-3)
+            self._cached = (min(max(float(g[0]), 1e-3), g50), g50,
+                            max(float(g[2]), g50))
+        return self._cached
+
+    def window(self) -> Optional[Tuple[float, float]]:
+        """(prewarm_at, release_at) absolute times, or None."""
+        p = self._predict()
+        if p is None or self.last_t is None:
+            return None
+        return self.last_t + p[0], self.last_t + p[2]
+
+    def predict_next(self) -> Optional[float]:
+        p = self._predict()
+        if p is None or self.last_t is None:
+            return None
+        return self.last_t + p[1]
+
+    def uncertainty(self) -> float:
+        p = self._predict()
+        if p is None:
+            return float("inf")
+        return p[2] - p[0]
+
+
+def transformer_or_fallback(checkpoint: Optional[str] = None) -> Callable:
+    """Predictor factory for the policy catalog: the trained forecaster
+    when a checkpoint resolves, else ``HistogramPredictor`` with a
+    one-time warning — so ``suite("prewarm_transformer")`` stays
+    constructible (and CATALOG iterable) on machines that have not run
+    ``scripts/train_predictors.py`` yet."""
+    from repro.learn.forecaster import resolve_checkpoint
+    path = resolve_checkpoint(checkpoint)
+    if path is None:
+        global _WARNED_FALLBACK
+        if not _WARNED_FALLBACK:
+            warnings.warn(
+                "no trained forecaster checkpoint found; transformer "
+                "suites fall back to HistogramPredictor (train one with "
+                "scripts/train_predictors.py)")
+            _WARNED_FALLBACK = True
+        from repro.core.predictors.histogram import HistogramPredictor
+        return HistogramPredictor
+
+    def factory():
+        return TransformerPredictor(checkpoint=path)
+    factory.name = TransformerPredictor.name
+    return factory

@@ -26,6 +26,7 @@ import dataclasses
 import gzip
 import heapq
 import math
+import os
 import warnings
 import zlib
 from dataclasses import dataclass
@@ -242,6 +243,39 @@ def azure_like(horizon: float, *, num_functions: int = 40, seed: int = 0,
         while t < horizon:
             inv.append(Invocation(t, name))
             t += rng.exponential(1.0 / lam)
+    return Trace(inv, fns, horizon)
+
+
+def cron_spikes(horizon: float, *, num_functions: int = 8,
+                base_gap_s: float = 240.0, spike_gap_s: float = 75.0,
+                spike_period_s: float = 7200.0, jitter: float = 0.04,
+                seed: int = 0, **fn_kw) -> Trace:
+    """Timer-triggered functions with a phase-locked early re-fire.
+
+    Each function invokes roughly every ``base_gap_s`` (± ``jitter``), but
+    once per ``spike_period_s`` cycle — when an arrival lands in the first
+    ``base_gap_s``-wide slot of the cycle — it re-fires after the much
+    shorter ``spike_gap_s`` (an hourly-cron double-fire / retry).  The
+    re-fire is *deterministic in wall-clock phase* but a small fraction of
+    the gap mass, so per-function marginal gap quantiles (histogram-family
+    predictors) sit far above it while a sequence model that sees
+    time-of-day features can anticipate it — the workload regime where
+    ML-based CSF prediction has headroom over application-knowledge
+    baselines."""
+    rng = np.random.default_rng(seed)
+    fns = _mk_functions(num_functions, **fn_kw)
+    inv = []
+    for name in fns:
+        t = rng.uniform(0, base_gap_s)
+        last_spike_cycle = -1
+        while t < horizon:
+            inv.append(Invocation(t, name))
+            cycle = int(t // spike_period_s)
+            if cycle != last_spike_cycle and (t % spike_period_s) < base_gap_s:
+                gap, last_spike_cycle = spike_gap_s, cycle
+            else:
+                gap = base_gap_s
+            t += gap * (1 + jitter * (rng.random() - 0.5) * 2)
     return Trace(inv, fns, horizon)
 
 
@@ -518,6 +552,32 @@ def azure_csv(path: str, *, horizon: Optional[float] = None,
                          approx_invocations=total)
 
 
+AZURE_CSV_ENV = "REPRO_AZURE_CSV"
+
+
+def azure_stress(horizon: float, *, num_functions: int = 1000, seed: int = 0,
+                 rate_per_s: float = 50.0, csv_path: Optional[str] = None,
+                 jitter: bool = False, **fn_kw) -> StreamedTrace:
+    """The ``stress/*`` source: the *real* Azure 2019 CSV when one is
+    available, the synthetic :func:`azure_full` twin otherwise.
+
+    A downloaded per-minute-count CSV is routed in via ``csv_path`` or the
+    ``REPRO_AZURE_CSV`` environment variable (the experiments CLI's
+    ``--azure-csv`` flag sets it); with neither — or a path that does not
+    exist — the cell gracefully falls back to the calibrated synthetic so
+    stress tiers stay runnable on machines without the dataset."""
+    path = csv_path or os.environ.get(AZURE_CSV_ENV)
+    if path:
+        if os.path.exists(path):
+            return azure_csv(path, horizon=horizon,
+                             max_functions=num_functions, seed=seed,
+                             jitter=jitter, **fn_kw)
+        warnings.warn(f"{AZURE_CSV_ENV}={path!r} does not exist; "
+                      "falling back to the synthetic azure_full twin")
+    return azure_full(horizon, num_functions=num_functions, seed=seed,
+                      rate_per_s=rate_per_s, **fn_kw)
+
+
 def iat_files(paths: Mapping[str, str], *, horizon: float, seed: int = 0,
               **fn_kw) -> StreamedTrace:
     """Stream per-function inter-arrival-time files, merged time-ordered.
@@ -556,6 +616,7 @@ def iat_files(paths: Mapping[str, str], *, horizon: float, seed: int = 0,
 STREAMING_GENERATORS = {
     "azure_full": azure_full,
     "azure_csv": azure_csv,
+    "azure_stress": azure_stress,
     "iat_files": iat_files,
 }
 
@@ -567,6 +628,7 @@ ALL_GENERATORS = {
     "rare": rare,
     "chains": chains,
     "azure_like": azure_like,
+    "cron_spikes": cron_spikes,
     **STREAMING_GENERATORS,
 }
 

@@ -187,22 +187,69 @@ for label, sc in [
 # bypassed, arrivals merge into the heap incrementally); bench_simcore's
 # stress tier measures heap-events/s and peak RSS at these scales
 # --------------------------------------------------------------------------- #
-AZURE_10K = _w("azure_full", "azure_10k", seed=2019, horizon=600.0,
+# azure_stress replays a real downloaded Azure Functions CSV when
+# $REPRO_AZURE_CSV (or the --azure-csv CLI flag) points at one, and
+# falls back to the synthetic azure_full twin otherwise
+AZURE_10K = _w("azure_stress", "azure_10k", seed=2019, horizon=600.0,
                num_functions=10_000, rate_per_s=100.0)
-AZURE_50K = _w("azure_full", "azure_50k", seed=2019, horizon=600.0,
+AZURE_50K = _w("azure_stress", "azure_50k", seed=2019, horizon=600.0,
                num_functions=50_000, rate_per_s=150.0)
 STRESS_CLUSTER = ClusterSpec(num_workers=8, worker_memory_mb=2_000_000.0)
 
 register(Scenario(
     name="stress/azure10k", workload=AZURE_10K, policy="provider_default",
     cluster=STRESS_CLUSTER,
-    description="10k-function streamed azure_full replay (bench_simcore "
-                "stress tier; ~100 arrivals/s Zipf + diurnal)"))
+    description="10k-function streamed Azure replay — real CSV via "
+                "$REPRO_AZURE_CSV / --azure-csv, synthetic twin otherwise "
+                "(bench_simcore stress tier; ~100 arrivals/s)"))
 register(Scenario(
     name="stress/azure50k", workload=AZURE_50K, policy="provider_default",
     cluster=STRESS_CLUSTER,
-    description="50k-function streamed azure_full replay — the SPES-scale "
-                "regime; memory stays O(live containers), never O(trace)"))
+    description="50k-function streamed Azure replay (real CSV via "
+                "$REPRO_AZURE_CSV when present) — the SPES-scale regime; "
+                "memory stays O(live containers), never O(trace)"))
+
+# --------------------------------------------------------------------------- #
+# learned-predictor cells (ROADMAP item 3): the bench_learn Pareto gate
+# compares identical prewarm suites that differ ONLY in the predictor
+# (histogram vs trained transformer).  The cron_spikes eval cells pin
+# seeds disjoint from repro.learn.dataset.TRAIN_MIX (whose seeds derive
+# from a master seed) — same regime, held-out traces.
+# --------------------------------------------------------------------------- #
+CRON_A = _w("cron_spikes", "cron_a", seed=101, horizon=18_000.0,
+            num_functions=8, base_gap_s=240.0, spike_gap_s=75.0,
+            spike_period_s=7200.0, jitter=0.04)
+CRON_B = _w("cron_spikes", "cron_b", seed=202, horizon=36_000.0,
+            num_functions=6, base_gap_s=400.0, spike_gap_s=90.0,
+            spike_period_s=14_400.0, jitter=0.04)
+
+LEARN = register(Scenario(
+    name="learn", workload=CRON_A, policy="prewarm_transformer",
+    description="learned-forecaster base: cron workload whose sub-p05 "
+                "early re-fires the histogram window misses"))
+
+register(Scenario(
+    name="learn/gym", workload=_w("azure_like", "gym_azure", seed=1,
+                                  horizon=600.0, num_functions=12),
+    policy="tiered_fixed",
+    description="one cell of the RL keep-alive gym training grid "
+                "(repro.learn.gym.training_scenarios)"))
+
+register_sweep(Sweep(
+    name="learn_pareto", base=LEARN,
+    axes={"workload": (CRON_A, CRON_B, AZURE_TAXONOMY, RARE_TIERS),
+          "policy": ("prewarm_histogram", "prewarm_transformer")},
+    description="bench_learn Pareto gate: trained transformer vs "
+                "histogram predictor behind the identical prewarm suite"))
+
+register_sweep(Sweep(
+    name="learn_grid", base=LEARN,
+    axes={"workload": tuple(
+        _w("azure_like", f"gym_azure_s{s}", seed=s, horizon=600.0,
+           num_functions=12) for s in (1, 2, 3, 4)),
+          "policy": ("tiered_fixed", "tiered_rl_learned")},
+    description="the DQN agent's training grid: exported-schedule replay "
+                "vs the static ladder baseline"))
 
 # --------------------------------------------------------------------------- #
 # sweeps (the grids the benchmark tables iterate)

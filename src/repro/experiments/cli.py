@@ -168,6 +168,9 @@ def main(argv: Optional[List[str]] = None) -> int:
 
     p_run = sub.add_parser("run", help="run one scenario on 1+ drivers")
     p_run.add_argument("name")
+    p_run.add_argument("--azure-csv", metavar="PATH",
+                       help="real Azure Functions trace CSV for the "
+                            "azure_stress cells (sets $REPRO_AZURE_CSV)")
     p_run.add_argument("--driver", action="append",
                        choices=runner.DRIVERS,
                        help="repeatable; 2+ drivers also prints the diff")
@@ -193,8 +196,16 @@ def main(argv: Optional[List[str]] = None) -> int:
     p_sw.add_argument("--max-cells", type=int, default=256, metavar="N",
                       help="refuse grids larger than N cells instead of "
                            "silently running them (default 256)")
+    p_sw.add_argument("--azure-csv", metavar="PATH",
+                      help="real Azure Functions trace CSV for the "
+                           "azure_stress cells (sets $REPRO_AZURE_CSV)")
 
     args = ap.parse_args(argv)
+    if getattr(args, "azure_csv", None):
+        import os
+
+        from repro.core.workload import AZURE_CSV_ENV
+        os.environ[AZURE_CSV_ENV] = args.azure_csv
     try:
         return {"list": _cmd_list, "run": _cmd_run,
                 "sweep": _cmd_sweep}[args.cmd](args)

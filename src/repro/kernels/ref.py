@@ -128,8 +128,8 @@ def _tier_select(table, tier):
     return out
 
 
-def cluster_step_ref(nw, fs, free, arrivals, conc, now, fparam, promote,
-                     dwell, ntier, frac, scal):
+def cluster_step_full(nw, fs, free, arrivals, conc, now, fparam, promote,
+                      dwell, ntier, frac, scal):
     """One fixed-dt step of the batched cluster cohort model (one cell).
 
     Semantics per step, in order (mirroring the scalar simulator's
@@ -152,7 +152,10 @@ def cluster_step_ref(nw, fs, free, arrivals, conc, now, fparam, promote,
       4. idle accounting — container-seconds not spent serving are billed
          GB-s at the cohort tier's footprint fraction.
 
-    Returns ``(nw, fs, free, agg_delta[AG_N])``.
+    Returns ``(nw, fs, free, agg_delta[AG_N], extras)`` where ``extras``
+    is a ``(cold[F], idle_gb[F])`` pair of *per-function* step deltas —
+    the reward channels the RL gym (``repro.learn.gym``) consumes before
+    they are summed into the cell aggregate.
     """
     f32 = jnp.float32
     F, W = nw.shape
@@ -311,6 +314,16 @@ def cluster_step_ref(nw, fs, free, arrivals, conc, now, fparam, promote,
 
     fs = jnp.stack([tier, edge, deadline, queued, has_snap,
                     img.astype(f32)], axis=1)
+    return nw, fs, free, agg, (cold, idle_gb)
+
+
+def cluster_step_ref(nw, fs, free, arrivals, conc, now, fparam, promote,
+                     dwell, ntier, frac, scal):
+    """Aggregate-only view of :func:`cluster_step_full` — the signature the
+    batch driver and the Pallas twin are parity-tested against."""
+    nw, fs, free, agg, _ = cluster_step_full(
+        nw, fs, free, arrivals, conc, now, fparam, promote, dwell, ntier,
+        frac, scal)
     return nw, fs, free, agg
 
 

@@ -1,0 +1,46 @@
+"""repro.learn — in-repo training for the ML-based cold-start mitigations.
+
+The paper's taxonomy singles out AI/ML-driven CSF reduction as the family
+with the most open headroom; this package trains both flavours on the
+repo's own JAX stack instead of shipping hand-tuned heuristics:
+
+* a **transformer next-invocation-gap forecaster** (arXiv 2504.11338
+  lineage): :mod:`features`/:mod:`dataset` window traces into batched
+  examples, :mod:`forecaster` trains a small ``models/transformer.py``
+  stack through ``training/train_loop.py`` to predict gap quantiles, and
+  ``core/predictors/transformer.py`` serves the checkpoint behind the
+  same protocol as the histogram/LSTM predictors;
+* an **off-policy DQN keep-alive agent** (arXiv 2308.07541 lineage):
+  :mod:`gym` exposes ``core/batchsim.py`` as a vectorized
+  [cells, functions] environment and :mod:`agent` trains a Q-network
+  whose greedy policy exports to the static per-function schedules
+  ``batchsim.static_schedules`` replays (and to an ``RLLadder``-
+  compatible runtime policy for the scalar/fleet drivers).
+
+See docs/learning.md for the data pipeline, the gym contract, the reward
+definition, and how to reproduce the Pareto gate
+(``benchmarks/bench_learn.py``).
+"""
+from repro.learn.features import FeatureConfig, encode_window, function_examples
+from repro.learn.dataset import batches, build_examples, training_traces
+
+__all__ = ["FeatureConfig", "encode_window", "function_examples",
+           "batches", "build_examples", "training_traces",
+           "BatchSimGym", "training_scenarios", "train_agent",
+           "export_schedule", "train_forecaster"]
+
+_LAZY = {
+    # jax-importing modules stay off the package-import fast path
+    "BatchSimGym": "repro.learn.gym",
+    "training_scenarios": "repro.learn.gym",
+    "train_agent": "repro.learn.agent",
+    "export_schedule": "repro.learn.agent",
+    "train_forecaster": "repro.learn.forecaster",
+}
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+        return getattr(importlib.import_module(_LAZY[name]), name)
+    raise AttributeError(f"module 'repro.learn' has no attribute {name!r}")

@@ -1,0 +1,257 @@
+"""The batch simulator as a vectorized RL environment for keep-alive.
+
+``BatchSimGym`` wraps a list of batch-supported scenarios (one *cell*
+each) into a gym the DQN agent (``repro.learn.agent``) steps in epochs:
+
+* **state** — the batch driver's array-state ``(nw, fs, free)`` plus the
+  agent-side observables (time since last arrival, EMA inter-arrival
+  gap), advanced ``epoch_steps`` fixed-``dt`` kernel steps per
+  environment step as ONE jitted program (``lax.scan`` over time of
+  ``vmap`` over cells — the same shape as the production driver);
+* **action** — a per-(cell, function) warm dwell in seconds, written
+  into schedule slot 0 (``dwell[:, :, 0]``) for the epoch; the trained
+  policy quantises to :data:`~repro.core.predictors.rl.ACTIONS` but the
+  gym accepts any dwell, which is how exported schedules are evaluated;
+* **reward** — per (cell, function), summed over the epoch::
+
+      r = -(cold_penalty * cold_starts + idle_cost_per_gb_s * idle_gb_s)
+
+  read from the per-function extras channel of
+  :func:`repro.kernels.ref.cluster_step_full` *before* it is summed
+  into the cell aggregate.  With the defaults (1.0 / 0.05) a 1 GB
+  function breaks even at a ~20 s gap — short-gap functions should stay
+  warm, long-gap ones should demote, so the action choice is
+  non-degenerate across the ACTIONS lattice.
+
+Observations (``OBS_DIM`` per function): ``log1p`` time since last
+arrival, ``log1p`` EMA gap, warmth tier / 4, ``log1p`` queued, and the
+sin/cos wall-clock phase over :data:`PHASE_PERIOD_S` — enough signal to
+separate hot, periodic, and dead functions without replaying history.
+
+Padded function rows (cells with fewer functions than the grid max)
+never see arrivals and earn exactly zero reward; :attr:`valid_mask`
+marks the real rows so the agent can drop the padding transitions.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, NamedTuple, Sequence
+
+import numpy as np
+
+from repro.core.batchsim import DEFAULT_DT, build_tables
+from repro.core.predictors.rl import ACTIONS
+
+OBS_DIM = 6
+PHASE_PERIOD_S = 3600.0
+DEFAULT_COLD_PENALTY = 1.0
+DEFAULT_IDLE_COST = 0.05          # per GB-s; break-even gap ~20 s at 1 GB
+
+
+def training_scenarios(*, seeds: Sequence[int] = (1, 2, 3, 4),
+                       num_functions: int = 12, horizon: float = 600.0):
+    """The default training grid: azure_like cells under ``tiered_fixed``
+    (batch-supported, full ladder shape) differing only by trace seed."""
+    from repro.experiments.spec import Scenario, WorkloadSpec
+    return [
+        Scenario(
+            name=f"learn/gym/s{seed}",
+            workload=WorkloadSpec("azure_like",
+                                  {"horizon": horizon,
+                                   "num_functions": num_functions},
+                                  seed=seed),
+            policy="tiered_fixed",
+            description="RL keep-alive gym training cell")
+        for seed in seeds]
+
+
+class GymState(NamedTuple):
+    """The jit-traversable environment state (all jnp arrays)."""
+
+    nw: object        # [C, F, W] resident containers
+    fs: object        # [C, F, FS_N] cohort scalars
+    free: object      # [C, W] free MB
+    epoch: object     # scalar int32
+    last_arr: object  # [C, F] last arrival time (-1 = never)
+    ema_gap: object   # [C, F] EMA inter-arrival gap (0 = unknown)
+
+
+class BatchSimGym:
+    def __init__(self, scenarios: Sequence, *, dt: float = DEFAULT_DT,
+                 epoch_steps: int = 60,
+                 cold_penalty: float = DEFAULT_COLD_PENALTY,
+                 idle_cost_per_gb_s: float = DEFAULT_IDLE_COST,
+                 actions: Sequence[float] = ACTIONS):
+        self.scenarios = list(scenarios)
+        self.dt = dt
+        self.epoch_steps = epoch_steps
+        self.cold_penalty = cold_penalty
+        self.idle_cost_per_gb_s = idle_cost_per_gb_s
+        self.actions = tuple(float(a) for a in actions)
+
+        cache: Dict[str, object] = {}
+
+        def trace_fn(sc):
+            if sc.name not in cache:
+                cache[sc.name] = sc.trace()
+            return cache[sc.name]
+
+        self.tables = build_tables(self.scenarios, dt=dt, trace_fn=trace_fn)
+        # build_tables collapses names to row indices; the exportable
+        # schedule needs them back
+        self.function_names: List[List[str]] = [
+            list(trace_fn(sc).functions) for sc in self.scenarios]
+        C, F, _ = self.tables.nw.shape
+        self.C, self.F = C, F
+        self.valid_mask = np.zeros((C, F), bool)
+        for ci, names in enumerate(self.function_names):
+            self.valid_mask[ci, :len(names)] = True
+
+        # pad the time axis to whole epochs; trailing steps are past every
+        # horizon and no-op inside the kernel (dt_eff == 0)
+        T = self.tables.arrivals.shape[1]
+        Tp = int(math.ceil(T / epoch_steps)) * epoch_steps
+        arr = self.tables.arrivals
+        cnc = self.tables.conc
+        if Tp > T:
+            pad = ((0, 0), (0, Tp - T), (0, 0))
+            arr = np.pad(arr, pad)
+            cnc = np.pad(cnc, pad)
+        self._arrivals = arr
+        self._conc = cnc
+        self.num_epochs = Tp // epoch_steps
+        self._fns = None
+
+    # ------------------------------------------------------------------ #
+    def _build(self):
+        if self._fns is not None:
+            return self._fns
+        import jax
+        import jax.numpy as jnp
+
+        from repro.kernels import ref as R
+
+        tb = self.tables
+        C, F, E = self.C, self.F, self.epoch_steps
+        dt = jnp.float32(self.dt)
+        arr = jnp.asarray(np.moveaxis(self._arrivals, 1, 0))   # [T, C, F]
+        cnc = jnp.asarray(np.moveaxis(self._conc, 1, 0))
+        fparam = jnp.asarray(tb.fparam)
+        promote = jnp.asarray(tb.promote)
+        dwell0 = jnp.asarray(tb.dwell)
+        ntier = jnp.asarray(tb.ntier)
+        frac = jnp.asarray(tb.frac)
+        scal = jnp.asarray(tb.scal)
+        nw0 = jnp.asarray(tb.nw)
+        fs0 = jnp.asarray(tb.fs)
+        free0 = jnp.asarray(tb.free)
+        cp = jnp.float32(self.cold_penalty)
+        ic = jnp.float32(self.idle_cost_per_gb_s)
+
+        step = jax.vmap(R.cluster_step_full,
+                        in_axes=(0, 0, 0, 0, 0, None, 0, 0, 0, 0, 0, 0))
+
+        def obs_of(fs, last_arr, ema_gap, now):
+            tsl = jnp.where(last_arr >= 0.0, now - last_arr, 1e6)
+            ph = 2.0 * jnp.pi * now / PHASE_PERIOD_S
+            one = jnp.ones_like(tsl)
+            return jnp.stack([
+                jnp.log1p(jnp.clip(tsl, 0.0, 1e6)),
+                jnp.log1p(jnp.clip(ema_gap, 0.0, 1e6)),
+                fs[:, :, R.FS_TIER] / 4.0,
+                jnp.log1p(fs[:, :, R.FS_QUEUED]),
+                jnp.sin(ph) * one,
+                jnp.cos(ph) * one,
+            ], axis=-1)
+
+        @jax.jit
+        def reset():
+            last = jnp.full((C, F), -1.0, jnp.float32)
+            ema = jnp.zeros((C, F), jnp.float32)
+            state = GymState(nw0, fs0, free0, jnp.int32(0), last, ema)
+            return state, obs_of(fs0, last, ema, jnp.float32(0.0))
+
+        @jax.jit
+        def epoch(state: GymState, warm_s):
+            """Advance one epoch under per-(cell, fn) warm dwell seconds."""
+            nw, fs, free, e, last, ema = state
+            dwell = dwell0.at[:, :, 0].set(warm_s.astype(jnp.float32))
+            a_e = jax.lax.dynamic_slice(arr, (e * E, 0, 0), (E, C, F))
+            c_e = jax.lax.dynamic_slice(cnc, (e * E, 0, 0), (E, C, F))
+            nows = (e.astype(jnp.float32) * E
+                    + jnp.arange(E, dtype=jnp.float32)) * dt
+
+            def body(carry, xs):
+                nw, fs, free, last, ema, cold_a, idle_a = carry
+                a_t, c_t, now = xs
+                nw, fs, free, _, (cold, idle_gb) = step(
+                    nw, fs, free, a_t, c_t, now, fparam, promote, dwell,
+                    ntier, frac, scal)
+                arrived = a_t > 0
+                gap = now - last
+                upd = jnp.where(ema > 0, 0.7 * ema + 0.3 * gap, gap)
+                ema = jnp.where(arrived & (last >= 0), upd, ema)
+                last = jnp.where(arrived, now, last)
+                return (nw, fs, free, last, ema,
+                        cold_a + cold, idle_a + idle_gb), None
+
+            z = jnp.zeros((C, F), jnp.float32)
+            (nw, fs, free, last, ema, cold, idle), _ = jax.lax.scan(
+                body, (nw, fs, free, last, ema, z, z), (a_e, c_e, nows))
+            e1 = e + 1
+            now1 = e1.astype(jnp.float32) * E * dt
+            reward = -(cp * cold + ic * idle)
+            state = GymState(nw, fs, free, e1, last, ema)
+            return state, obs_of(fs, last, ema, now1), reward, (cold, idle)
+
+        self._fns = (reset, epoch)
+        return self._fns
+
+    # ------------------------------------------------------------------ #
+    def reset(self):
+        """-> (state, obs[C, F, OBS_DIM])."""
+        return self._build()[0]()
+
+    def step(self, state: GymState, warm_s):
+        """Advance one epoch; ``warm_s`` is [C, F] dwell seconds.
+
+        -> (state, obs, reward[C, F], (cold[C, F], idle_gb[C, F]))."""
+        return self._build()[1](state, warm_s)
+
+    def done(self, state: GymState) -> bool:
+        return int(state.epoch) >= self.num_epochs
+
+    # ------------------------------------------------------------------ #
+    def warm_grid(self, warm_s: Dict[str, float],
+                  default_s: float) -> np.ndarray:
+        """Per-function schedule map -> the [C, F] dwell-seconds array the
+        stepper consumes (padded rows get ``default_s``; harmless — they
+        never see arrivals)."""
+        out = np.full((self.C, self.F), float(default_s), np.float32)
+        for ci, names in enumerate(self.function_names):
+            for fi, name in enumerate(names):
+                out[ci, fi] = float(warm_s.get(name, default_s))
+        return out
+
+    def evaluate(self, warm_s_grid: np.ndarray) -> Dict[str, float]:
+        """Total episode return of a *fixed* dwell grid — the yardstick for
+        exported schedules and fixed-TTL baselines alike.  Returns the
+        summed reward plus its cold / idle components (valid rows only)."""
+        import jax.numpy as jnp
+
+        grid = jnp.asarray(warm_s_grid, jnp.float32)
+        mask = np.asarray(self.valid_mask, np.float32)
+        state, _ = self.reset()
+        reward = cold = idle = 0.0
+        for _ in range(self.num_epochs):
+            state, _, r, (c, g) = self.step(state, grid)
+            reward += float((np.asarray(r) * mask).sum())
+            cold += float((np.asarray(c) * mask).sum())
+            idle += float((np.asarray(g) * mask).sum())
+        return {"reward": reward, "cold_starts": cold, "idle_gb_s": idle}
+
+    def baseline_rewards(self) -> Dict[float, Dict[str, float]]:
+        """Every fixed action as a flat schedule — the table the DRL gate
+        compares the exported schedule against."""
+        return {a: self.evaluate(np.full((self.C, self.F), a, np.float32))
+                for a in self.actions}

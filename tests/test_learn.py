@@ -1,0 +1,269 @@
+"""repro.learn: feature/dataset determinism, forecaster checkpointing,
+the batch-sim gym's parity with the production batch driver, and the
+RLLadder learned-schedule replay contract."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.workload import ALL_GENERATORS, cron_spikes
+from repro.learn.features import (FeatureConfig, decode_gap, encode_gap,
+                                  encode_window, function_examples)
+
+
+# --------------------------------------------------------------------------- #
+# workload: cron_spikes
+# --------------------------------------------------------------------------- #
+def test_cron_spikes_registered_and_deterministic():
+    assert "cron_spikes" in ALL_GENERATORS
+    a = cron_spikes(7200.0, num_functions=3, seed=4)
+    b = cron_spikes(7200.0, num_functions=3, seed=4)
+    assert [i.time for i in a.invocations] == [i.time for i in b.invocations]
+    assert cron_spikes(7200.0, num_functions=3, seed=5).invocations[0].time \
+        != a.invocations[0].time
+
+
+def test_cron_spikes_one_short_gap_per_cycle():
+    tr = cron_spikes(14_400.0, num_functions=1, base_gap_s=240.0,
+                     spike_gap_s=75.0, spike_period_s=7200.0, jitter=0.0,
+                     seed=1)
+    gaps = np.diff(tr.times_for("fn0"))
+    short = gaps < 150.0
+    # exactly one spike per full cycle, the rest at the base gap
+    assert short.sum() == 2
+    assert np.allclose(gaps[~short], 240.0)
+    assert np.allclose(gaps[short], 75.0)
+
+
+# --------------------------------------------------------------------------- #
+# features + dataset
+# --------------------------------------------------------------------------- #
+def test_encode_window_layout_and_mask():
+    cfg = FeatureConfig(window=4)
+    x = encode_window([10.0, 20.0], [100.0, 120.0], cfg)
+    assert x.shape == (4, cfg.n_features)
+    # right-aligned: first two rows are padding (mask channel 0)
+    assert np.allclose(x[:2, 1], 0.0) and np.allclose(x[2:, 1], 1.0)
+    assert np.isclose(x[2, 0], encode_gap(10.0, cfg))
+    assert np.isclose(decode_gap(x[3, 0]), 20.0)
+
+
+def test_function_examples_need_three_arrivals():
+    cfg = FeatureConfig(window=4)
+    X, y = function_examples([0.0, 10.0], cfg)
+    assert len(y) == 0
+    X, y = function_examples([0.0, 10.0, 25.0, 30.0], cfg)
+    # gaps (10, 15, 5): predict gap j from gaps < j  ->  2 examples
+    assert X.shape[0] == 2 and y.shape == (2,)
+    assert np.isclose(decode_gap(y[0]), 15.0)
+    assert np.isclose(decode_gap(y[1]), 5.0)
+
+
+def test_dataset_deterministic_under_derive_seed():
+    from repro.learn.dataset import TRAIN_MIX, build_examples, training_traces
+    cfg = FeatureConfig()
+    mix = [m for m in TRAIN_MIX if m[0] in ("cron_fast", "rare_a")]
+    a = build_examples(training_traces(7, mix), cfg, master_seed=7)
+    b = build_examples(training_traces(7, mix), cfg, master_seed=7)
+    assert np.array_equal(a["x"], b["x"]) and np.array_equal(a["y"], b["y"])
+    c = build_examples(training_traces(8, mix), cfg, master_seed=8)
+    assert not np.array_equal(a["y"], c["y"])
+
+
+def test_batches_deterministic_and_shaped():
+    from repro.learn.dataset import batches
+    cfg = FeatureConfig(window=4)
+    ex = {"x": np.arange(5 * 4 * cfg.n_features, dtype=np.float32)
+          .reshape(5, 4, cfg.n_features),
+          "y": np.arange(5, dtype=np.float32)}
+    a = [b["y"] for b in batches(ex, 3, steps=4)]
+    b = [b["y"] for b in batches(ex, 3, steps=4)]
+    assert all(np.array_equal(x, y) for x, y in zip(a, b))
+    assert a[0].shape == (3,)
+    with pytest.raises(ValueError):
+        next(batches({"x": ex["x"][:0], "y": ex["y"][:0]}, 3))
+
+
+# --------------------------------------------------------------------------- #
+# forecaster checkpointing
+# --------------------------------------------------------------------------- #
+def test_forecaster_checkpoint_roundtrip(tmp_path):
+    import jax
+
+    from repro.learn.forecaster import (apply_forecaster, init_forecaster,
+                                        load_forecaster, model_config,
+                                        save_forecaster)
+    from repro.training.checkpoint import tree_equal
+    cfg = model_config(num_layers=1, d_model=16, num_heads=2, d_ff=32)
+    feat = FeatureConfig(window=4)
+    params = init_forecaster(jax.random.key(0), cfg, feat)
+    q = np.asarray(apply_forecaster(
+        params, np.zeros((2, 4, feat.n_features), np.float32), cfg))
+    assert q.shape == (2, 3)
+    assert np.all(q[:, 0] <= q[:, 1]) and np.all(q[:, 1] <= q[:, 2])
+
+    path = str(tmp_path / "f.npz")
+    save_forecaster(path, params, cfg, feat, metrics={"final_loss": 0.5})
+    params2, cfg2, feat2, extra = load_forecaster(path)
+    assert tree_equal(params, params2)
+    assert cfg2.d_model == 16 and feat2 == feat
+    assert extra["metrics"]["final_loss"] == 0.5
+
+
+def test_transformer_predictor_serves_checkpoint(tmp_path, monkeypatch):
+    import jax
+
+    from repro.core.predictors.transformer import TransformerPredictor
+    from repro.learn.forecaster import (CHECKPOINT_ENV, init_forecaster,
+                                        model_config, save_forecaster)
+    cfg = model_config(num_layers=1, d_model=16, num_heads=2, d_ff=32)
+    feat = FeatureConfig(window=4)
+    path = str(tmp_path / "f.npz")
+    save_forecaster(path, init_forecaster(jax.random.key(1), cfg, feat),
+                    cfg, feat)
+    monkeypatch.setenv(CHECKPOINT_ENV, path)
+    pred = TransformerPredictor()
+    assert pred.window() is None and pred.predict_next() is None
+    assert pred.uncertainty() == float("inf")
+    pred.observe(0.0)
+    pred.observe(100.0)      # one gap: the forecaster already has a window
+    lo, hi = pred.window()
+    assert 100.0 < lo <= pred.predict_next() <= hi
+    assert pred.uncertainty() == pytest.approx(hi - lo)
+
+
+# --------------------------------------------------------------------------- #
+# gym parity with the batch driver
+# --------------------------------------------------------------------------- #
+def _fixture_gym(**kw):
+    from repro.experiments.spec import Scenario, WorkloadSpec
+    from repro.learn.gym import BatchSimGym
+    cells = [
+        Scenario(name=f"learntest/{i}",
+                 workload=WorkloadSpec("rare",
+                                       {"inter_arrival": 100.0,
+                                        "horizon": 400.0, "jitter": 0.0,
+                                        "num_functions": 1}, seed=s),
+                 policy="tiered_fixed")
+        for i, s in enumerate((1, 2))]
+    return BatchSimGym(cells, epoch_steps=100, **kw)
+
+
+def test_gym_cold_counts_hand_computed():
+    gym = _fixture_gym()
+    trace = gym.scenarios[0].trace()
+    n_arr = len(trace.invocations)
+    assert n_arr >= 3
+
+    def episode_cold(warm_s):
+        state, _ = gym.reset()
+        total = np.zeros((gym.C, gym.F), np.float64)
+        for _ in range(gym.num_epochs):
+            state, _, _, (cold, _) = gym.step(
+                state, np.full((gym.C, gym.F), warm_s, np.float32))
+            total += np.asarray(cold)
+        return total[:, 0]
+
+    # dwell longer than every gap: only the first spawn of each cell is cold
+    assert np.allclose(episode_cold(1800.0), 1.0)
+    # zero dwell: the cohort demotes after every burst, so every arrival
+    # is cold (first spawn, then one promote-resume per return)
+    assert np.allclose(episode_cold(0.0), float(n_arr))
+
+
+def test_gym_extras_match_batch_driver_aggregate():
+    """Stepping the gym with the tables' own dwell must reproduce the
+    production driver's AG_COLD / AG_IDLE_* totals exactly."""
+    from repro.core.batchsim import run_tables
+    from repro.kernels import ref as R
+    gym = _fixture_gym()
+    _, _, agg = run_tables(gym.tables)
+
+    warm = np.asarray(gym.tables.dwell[:, :, 0])
+    state, _ = gym.reset()
+    cold = np.zeros((gym.C, gym.F), np.float64)
+    idle = np.zeros((gym.C, gym.F), np.float64)
+    for _ in range(gym.num_epochs):
+        state, _, _, (c, g) = gym.step(state, warm)
+        cold += np.asarray(c)
+        idle += np.asarray(g)
+    np.testing.assert_allclose(cold.sum(axis=1), agg[:, R.AG_COLD],
+                               rtol=1e-5)
+    np.testing.assert_allclose(
+        idle.sum(axis=1),
+        agg[:, [R.AG_IDLE_WARM, R.AG_IDLE_PAUSED, R.AG_IDLE_SNAP]].sum(
+            axis=1), rtol=1e-4)
+
+
+def test_gym_reward_and_mask_shapes():
+    gym = _fixture_gym()
+    state, obs = gym.reset()
+    assert np.asarray(obs).shape == (gym.C, gym.F, 6)
+    assert gym.valid_mask.sum() == 2       # one real function per cell
+    state, obs, r, _ = gym.step(
+        state, np.full((gym.C, gym.F), 30.0, np.float32))
+    r = np.asarray(r)
+    assert r.shape == (gym.C, gym.F)
+    assert np.all(r <= 0.0)
+    # padded rows never earn reward
+    assert np.allclose(r[~gym.valid_mask], 0.0)
+
+
+# --------------------------------------------------------------------------- #
+# RLLadder learned-schedule replay (batch satellite)
+# --------------------------------------------------------------------------- #
+def _rl_scenario():
+    from repro.experiments.spec import Scenario, WorkloadSpec
+    return Scenario(name="learntest/rl",
+                    workload=WorkloadSpec("rare",
+                                          {"inter_arrival": 100.0,
+                                           "horizon": 400.0, "jitter": 0.0,
+                                           "num_functions": 2}, seed=3),
+                    policy="tiered_rl")
+
+
+def test_batch_rejects_online_rl_ladder():
+    from repro.core.batchsim import BatchUnsupportedPolicy, build_tables
+    with pytest.raises(BatchUnsupportedPolicy, match="online RL ladder"):
+        build_tables([_rl_scenario()])
+
+
+def test_batch_replays_attached_schedule(tmp_path, monkeypatch):
+    from repro.core.batchsim import static_schedules
+    from repro.core.policies.lifetime import (KEEPALIVE_SCHEDULE_ENV,
+                                              load_keepalive_schedule)
+    sc = _rl_scenario()
+    path = tmp_path / "sched.json"
+    path.write_text(json.dumps(
+        {"version": 1, "warm_s": {"fn0": 30.0, "fn1": 600.0},
+         "default_s": 120.0}))
+    monkeypatch.setenv(KEEPALIVE_SCHEDULE_ENV, str(path))
+    loaded = load_keepalive_schedule()
+    assert loaded["warm_s"] == {"fn0": 30.0, "fn1": 600.0}
+
+    suite = sc.suite()
+    suite.lifetime.attach_schedule(loaded["warm_s"],
+                                   default_s=loaded["default_s"])
+    assert "learned" in suite.lifetime.name
+    scheds = static_schedules(suite, sc.cost_model(), sc.trace())
+    # per-function warm dwell survives the freeze (demote-cost normalised,
+    # so >= the configured dwell, and the 570 s spread stays visible)
+    assert scheds["fn1"][0][0] - scheds["fn0"][0][0] == pytest.approx(
+        570.0, abs=5.0)
+
+    # end-to-end through the suite factory: tiered_rl_learned picks the
+    # env-resolved schedule up
+    from repro.core.policies import suite as make_suite
+    s2 = make_suite("tiered_rl_learned")
+    assert s2.lifetime.learned_warm_s == loaded["warm_s"]
+
+
+def test_tiered_rl_learned_falls_back_without_schedule(tmp_path,
+                                                       monkeypatch):
+    from repro.core.policies import suite as make_suite
+    monkeypatch.chdir(tmp_path)     # hide checkpoints/keepalive_schedule.json
+    monkeypatch.delenv("REPRO_KEEPALIVE_SCHEDULE", raising=False)
+    with pytest.warns(UserWarning, match="no exported keep-alive schedule"):
+        s = make_suite("tiered_rl_learned")
+    assert s.name == "tiered_rl"

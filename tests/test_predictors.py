@@ -65,6 +65,52 @@ def test_histogram_window_brackets_next_arrival():
     assert lo - 1.5 <= times[-1] <= hi + 5.0
 
 
+def test_transformer_predictor_registered_lazily():
+    """The learned forecaster registers beside the classical predictors
+    (lazy import keeps jax off the fast path)."""
+    import repro.core.predictors as P
+    assert "TransformerPredictor" in P.__all__
+    from repro.core.predictors.transformer import TransformerPredictor
+    assert P.TransformerPredictor is TransformerPredictor
+
+
+def test_transformer_or_fallback_without_checkpoint(tmp_path, monkeypatch):
+    """No checkpoint anywhere -> the factory degrades to the histogram
+    predictor (with a one-time warning) instead of crashing the suite."""
+    import repro.core.predictors.transformer as T
+    monkeypatch.chdir(tmp_path)     # hide checkpoints/forecaster.npz
+    monkeypatch.delenv("REPRO_FORECASTER_CKPT", raising=False)
+    monkeypatch.setattr(T, "_WARNED_FALLBACK", False)
+    with pytest.warns(UserWarning, match="fall back"):
+        factory = T.transformer_or_fallback()
+    assert factory is HistogramPredictor
+    assert isinstance(factory(), HistogramPredictor)
+
+
+def test_transformer_predictor_inference(tmp_path, monkeypatch):
+    """A (tiny, untrained) checkpoint serves the full predictor protocol:
+    window brackets predict_next, uncertainty = window width."""
+    import jax
+
+    from repro.core.predictors.transformer import TransformerPredictor
+    from repro.learn.features import FeatureConfig
+    from repro.learn.forecaster import (CHECKPOINT_ENV, init_forecaster,
+                                        model_config, save_forecaster)
+    cfg = model_config(num_layers=1, d_model=16, num_heads=2, d_ff=32)
+    feat = FeatureConfig(window=4)
+    path = str(tmp_path / "f.npz")
+    save_forecaster(path, init_forecaster(jax.random.key(0), cfg, feat),
+                    cfg, feat)
+    monkeypatch.setenv(CHECKPOINT_ENV, path)
+    pred = TransformerPredictor()
+    for t in _periodic(n=8, gap=30.0):
+        pred.observe(t)
+    lo, hi = pred.window()
+    nxt = pred.predict_next()
+    assert lo <= nxt <= hi and lo > pred.last_t
+    assert pred.uncertainty() == pytest.approx(hi - lo)
+
+
 def test_q_agent_learns_to_release_for_rare_functions():
     """With gaps far beyond every keep-alive action, releasing immediately
     (action 0) should become the preferred action."""

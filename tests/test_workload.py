@@ -26,6 +26,8 @@ FAMILY_ARGS = {
     "rare": dict(inter_arrival=5.0, horizon=60.0, num_functions=3),
     "chains": dict(rate=1.0, horizon=30.0, chain_len=3),
     "azure_like": dict(horizon=30.0, num_functions=10),
+    "cron_spikes": dict(horizon=3600.0, num_functions=3, base_gap_s=120.0,
+                        spike_gap_s=70.0, spike_period_s=1200.0),
 }
 MATERIALIZED = sorted(set(ALL_GENERATORS) - set(STREAMING_GENERATORS))
 
@@ -237,6 +239,28 @@ def test_azure_csv_jitter_is_seeded(tmp_path):
     c = list(azure_csv(str(p), jitter=True, seed=5))
     assert a == b
     assert a != c
+
+
+def test_azure_stress_routes_real_csv_via_env(tmp_path, monkeypatch):
+    """stress/* cells consume a real downloaded CSV through
+    $REPRO_AZURE_CSV; without one they fall back to the synthetic twin,
+    and a dangling path warns instead of crashing."""
+    from repro.core.workload import AZURE_CSV_ENV, azure_stress
+    p = tmp_path / "invocations.csv"
+    _write_csv(p, ["o1,a1,funcAAAAAAAAAAAA,http,2,0,1"])
+    monkeypatch.setenv(AZURE_CSV_ENV, str(p))
+    st = azure_stress(600.0, num_functions=10)
+    assert "azure_csv" in st.name
+    assert sum(1 for _ in st) == 3
+
+    monkeypatch.delenv(AZURE_CSV_ENV)
+    st = azure_stress(60.0, num_functions=20, seed=1)
+    assert "azure_full" in st.name
+
+    monkeypatch.setenv(AZURE_CSV_ENV, str(tmp_path / "missing.csv"))
+    with pytest.warns(UserWarning, match="does not exist"):
+        st = azure_stress(60.0, num_functions=20, seed=1)
+    assert "azure_full" in st.name
 
 
 def test_iat_files_merge_and_horizon(tmp_path):
