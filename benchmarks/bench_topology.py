@@ -1,0 +1,98 @@
+"""Edge–cloud offloading Pareto sweep — cold starts vs network latency.
+
+The faas-offloading-sim setting (SNIPPETS.md #2) on this codebase: a
+small edge tier with zero network price, a bigger cloud tier 80 ms away,
+and a workload whose concurrently-warm set overflows EITHER tier alone
+but fits the two combined.  The grid is the registry's
+``topo/edge_cloud_pareto`` sweep: per workload, the routing policies
+(local_first / greedy / probabilistic) against the two degenerate
+baselines (always_local, always_cloud).
+
+Emitted per cell: cold starts, mean + p95 end-to-end latency (network
+RTT + transfer included), offloaded fraction, mean network overhead, and
+the per-node request split.
+
+Acceptance gate (also pinned by ``tests/test_topology.py``): on at least
+one registered workload, greedy or probabilistic offloading *strictly
+dominates both baselines* — strictly fewer cold starts AND strictly
+lower mean latency than always_local and than always_cloud.  That is the
+paper-taxonomy claim in one line: the cold-start-vs-network trade-off
+has an interior optimum, and a state-aware router finds it.
+
+    python benchmarks/bench_topology.py            full grid + gate
+    python benchmarks/bench_topology.py --smoke    one workload, CI gate
+"""
+import json
+import sys
+
+from repro.experiments import registry, runner
+
+GATE_POLICIES = ("greedy", "probabilistic")
+BASELINES = ("always_local", "always_cloud")
+SWEEP = "topo/edge_cloud_pareto"
+
+
+def _dominates(cand, base) -> bool:
+    return (cand["cold_starts"] < base["cold_starts"]
+            and cand["latency_mean_s"] < base["latency_mean_s"])
+
+
+def run(emit, *, workloads=None, json_path=None):
+    results = {}
+    for sc in registry.get_sweep(SWEEP).scenarios():
+        wl = sc.workload.label
+        if workloads is not None and wl not in workloads:
+            continue
+        s = runner.run_summary(sc, "sim")
+        results.setdefault(wl, {})[sc.topology.offload] = s
+        emit(f"topo/{wl}/{sc.topology.offload}/latency_mean",
+             s["latency_mean_s"] * 1e6,
+             f"colds={s['cold_starts']:.0f} "
+             f"p95={s['latency_p95_s']:.3f}s "
+             f"off%={s['offloaded_fraction'] * 100:.1f} "
+             f"net={s['net_overhead_mean_s'] * 1e3:.1f}ms "
+             f"edge/cloud={s['node:edge:requests']:.0f}"
+             f"/{s['node:cloud:requests']:.0f}")
+
+    gate_ok = False
+    for wl, res in sorted(results.items()):
+        for pol in GATE_POLICIES:
+            cand = res[pol]
+            wins = all(_dominates(cand, res[b]) for b in BASELINES)
+            gate_ok |= wins
+            emit(f"topo/{wl}/{pol}/dominates_baselines",
+                 float(wins),
+                 f"{'ok' if wins else 'no'} "
+                 f"colds={cand['cold_starts']:.0f}-vs-"
+                 f"{res['always_local']['cold_starts']:.0f}/"
+                 f"{res['always_cloud']['cold_starts']:.0f} "
+                 f"mean={cand['latency_mean_s']:.3f}-vs-"
+                 f"{res['always_local']['latency_mean_s']:.3f}/"
+                 f"{res['always_cloud']['latency_mean_s']:.3f}",
+                 units="bool")
+
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump({"sweep": SWEEP, "gate_ok": gate_ok,
+                       "cells": results}, f, indent=1, default=str)
+    assert gate_ok, (
+        "Pareto gate failed: no routing policy strictly dominated both "
+        "always_local and always_cloud on any workload")
+
+
+def main() -> int:
+    try:
+        from benchmarks.emit import csv_emit
+    except ImportError:
+        from emit import csv_emit
+    smoke = "--smoke" in sys.argv
+    if smoke:
+        run(csv_emit, workloads=("azure_topo",),
+            json_path="BENCH_topology_smoke.json")
+    else:
+        run(csv_emit, json_path="BENCH_topology.json")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -22,6 +22,9 @@ values no longer need ``* 1e8``-style scale hacks — rows default to
   bench_learn      learned predictors: trained transformer forecaster vs
                    histogram Pareto gate + DQN keep-alive schedule vs
                    fixed TTL (writes BENCH_learn.json)
+  bench_topology   edge–cloud offloading Pareto sweep: greedy/probabilistic
+                   routing vs always_local/always_cloud baselines
+                   (writes BENCH_topology.json)
   bench_roofline   dry-run/roofline summary (deliverables e+g)
 
 The simulated modules are thin declarations over the scenario registry
@@ -43,7 +46,7 @@ import traceback
 from benchmarks import (bench_batchsim, bench_csf, bench_csl, bench_factors,
                         bench_fleet, bench_learn, bench_platforms, bench_qos,
                         bench_roofline, bench_serving, bench_simcore,
-                        bench_tiers, bench_tradeoffs)
+                        bench_tiers, bench_topology, bench_tradeoffs)
 from benchmarks.emit import csv_emit
 
 MODULES = [
@@ -59,6 +62,7 @@ MODULES = [
     ("simcore", bench_simcore),
     ("batchsim", bench_batchsim),
     ("learn", bench_learn),
+    ("topology", bench_topology),
     ("roofline", bench_roofline),
 ]
 

@@ -69,6 +69,7 @@ def main(argv: Optional[List[str]] = None) -> int:
         return 1
     inv = S.invocations(log.events)
     occupancy = S.tier_occupancy(log.events)
+    offloads = S.offload_table(log.events)   # {} for flat-cluster logs
 
     if args.json:
         payload = {
@@ -80,6 +81,7 @@ def main(argv: Optional[List[str]] = None) -> int:
             "phase_percentiles": S.phase_percentiles(inv, by="path"),
             "cold_attribution": S.cold_attribution(inv),
             "tier_occupancy_gb_s": occupancy,
+            "offloading": offloads,
         }
         print(json.dumps(payload, indent=2, sort_keys=True))
     else:
@@ -87,6 +89,9 @@ def main(argv: Optional[List[str]] = None) -> int:
         print(f"# {args.events}  ({len(log.events)} events"
               + (f"; {meta}" if meta else "") + ")")
         print(S.format_report(inv, occupancy))
+        if offloads:
+            print()
+            print(S.format_offload_table(offloads))
 
     if args.fidelity:
         sc, functions = _scenario_functions(log, args.scenario)

@@ -16,6 +16,10 @@ went* for each request and *which warmth tier* served it:
                        intervals — independently re-derives the ledger's
                        ``idle_gb_s_by_tier`` split, so the two can be
                        cross-checked
+  offload_table()      where the topology router sent requests: per
+                       destination node, counts / QoS-class mix / network
+                       seconds, from the ``offload`` events (empty for
+                       flat single-cluster logs)
 """
 from __future__ import annotations
 
@@ -193,6 +197,46 @@ def tier_occupancy(events: Iterable[Mapping[str, Any]], *,
     for cid in list(open_dwell):
         close(cid, end)
     return gb_s
+
+
+def offload_table(events: Iterable[Mapping[str, Any]]
+                  ) -> Dict[str, Dict[str, Any]]:
+    """Per-destination routing table from the topology ``offload`` events.
+
+    ``{dst: {requests, offloaded, fraction, net_s, net_mean_s,
+    by_class}}`` — ``offloaded`` counts arrivals whose destination was not
+    their ingress (``net_s`` is the RTT + transfer those paid).  Returns
+    ``{}`` for flat single-cluster logs, so callers can gate on emptiness.
+    """
+    out: Dict[str, Dict[str, Any]] = {}
+    total = 0
+    for ev in events:
+        if ev["kind"] != "offload":
+            continue
+        total += 1
+        row = out.setdefault(ev["dst"], {
+            "requests": 0, "offloaded": 0, "net_s": 0.0, "by_class": {}})
+        row["requests"] += 1
+        row["offloaded"] += int(ev["dst"] != ev["src"])
+        row["net_s"] += ev["rtt_s"] + ev["xfer_s"]
+        c = ev["qos_class"]
+        row["by_class"][c] = row["by_class"].get(c, 0) + 1
+    for row in out.values():
+        row["fraction"] = row["requests"] / total
+        row["net_mean_s"] = row["net_s"] / row["requests"]
+        row["by_class"] = dict(sorted(row["by_class"].items()))
+    return dict(sorted(out.items()))
+
+
+def format_offload_table(table: Dict[str, Dict[str, Any]]) -> str:
+    lines = ["offload routing by destination node:"]
+    for dst, row in table.items():
+        classes = ",".join(f"{c}:{n}" for c, n in row["by_class"].items())
+        lines.append(
+            f"  {dst:16s} {row['requests']:8d}  "
+            f"({row['fraction'] * 100:5.1f}%)  "
+            f"net={row['net_mean_s'] * 1e3:7.1f}ms  {classes}")
+    return "\n".join(lines)
 
 
 # --------------------------------------------------------------------------- #

@@ -543,6 +543,12 @@ def simulate_batch(scenarios: Sequence, *, dt: float = DEFAULT_DT,
                    interpret: bool = True) -> List[BatchLedger]:
     """Run every scenario as one batched JAX program; one
     :class:`BatchLedger` per cell, in input order."""
+    for sc in scenarios:
+        if getattr(sc, "topology", None) is not None:
+            raise ValueError(
+                f"scenario {getattr(sc, 'name', sc)!r} has a topology; "
+                "the batch driver models one flat cluster per cell — "
+                "run topology scenarios under driver='sim' or 'fleet'")
     tables = build_tables(scenarios, dt=dt, cost_model=cost_model,
                           trace_fn=trace_fn)
     nw, fs, agg = run_tables(tables, kernel=kernel, interpret=interpret)

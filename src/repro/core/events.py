@@ -19,11 +19,19 @@ stay schema-compatible with modeled ones — that is what lets
 ``analyze/calibrate.py`` close the loop from engine measurements back
 into ``CostModel.from_calibration``.
 
-Schema (version 1) — every event carries ``t`` (virtual seconds) and
+Schema (version 2) — every event carries ``t`` (virtual seconds) and
 ``kind``; per-kind payload fields are listed in :data:`EVENT_SCHEMA`.
 Warmth tiers serialize as lowercase names ("dead", "img_cached",
 "snapshot_ready", "paused", "warm_idle"); startup phase breakdowns as
-``{phase_name: seconds}`` dicts.
+``{phase_name: seconds}`` dicts.  Version 2 adds the topology layer
+(``repro.topology``): an ``offload`` event kind (the routing decision —
+destination node, QoS class, and the network price paid) and an optional
+``node`` annotation allowed on ANY kind, stamping which node's cluster
+kernel emitted it.  Unlike ``wall``, ``node`` is part of run identity —
+normalize() keeps it, so the sim-vs-fleet gate also checks that both
+drivers routed every request to the same node.  The version-1 reader
+path still works: files without topology fields are valid version-2
+streams, and the reader accepts either header version.
 
 Event vocabulary:
 
@@ -45,6 +53,8 @@ Event vocabulary:
   idle         container turned warm-idle; the keep-warm window opens (kernel)
   expire       container destroyed, from which tier and why ("expire" = TTL
                / ladder death, "evict" = memory pressure) (kernel)
+  offload      a topology router sent the request to a node; carries the
+               QoS class and the network RTT/transfer cost paid (topology)
 """
 from __future__ import annotations
 
@@ -56,7 +66,9 @@ from typing import (Any, Callable, Counter, Dict, Iterable, List, Mapping,
 from repro.core.lifecycle import Breakdown, WarmthTier
 
 SCHEMA_NAME = "repro.events"
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2
+# older streams this reader still accepts (v1 = v2 minus topology fields)
+SUPPORTED_VERSIONS = (1, 2)
 
 TIER_NAMES = tuple(t.name.lower() for t in WarmthTier)
 
@@ -78,11 +90,19 @@ EVENT_SCHEMA: Dict[str, Dict[str, type]] = {
     "exec_end": {"cid": int, "function": str},
     "idle": {"cid": int, "function": str, "resident_mb": float},
     "expire": {"cid": int, "function": str, "tier": str, "reason": str},
+    "offload": {"function": str, "qos_class": str, "src": str, "dst": str,
+                "rtt_s": float, "xfer_s": float},
 }
 
 # fields that legitimately differ between modeled and measured runs of the
 # same scenario — stripped by normalize() before identity comparison
 WALL_FIELDS = ("wall",)
+
+# optional annotations allowed on ANY kind; unlike WALL_FIELDS these are
+# part of run identity (normalize() keeps them): topology runs stamp each
+# kernel event with the node that emitted it, so sim-vs-fleet identity
+# also asserts both drivers routed every request identically
+ANNOTATION_FIELDS = ("node",)
 
 
 def tier_name(tier: Optional[WarmthTier]) -> str:
@@ -181,6 +201,11 @@ class EventLog:
         self.emit("expire", t, cid=cid, function=function,
                   tier=tier_name(tier), reason=reason)
 
+    def offload(self, t: float, function: str, qos_class: str, src: str,
+                dst: str, rtt_s: float, xfer_s: float) -> None:
+        self.emit("offload", t, function=function, qos_class=qos_class,
+                  src=src, dst=dst, rtt_s=rtt_s, xfer_s=xfer_s)
+
     # ------------------------------------------------------------------ #
     def counts(self) -> Dict[str, int]:
         c: Counter[str] = Counter()
@@ -211,10 +236,10 @@ class EventLog:
                 raise ValueError(
                     f"{path}: not a {SCHEMA_NAME} file "
                     f"(header schema={head.get('schema')!r})")
-            if head.get("version") != SCHEMA_VERSION:
+            if head.get("version") not in SUPPORTED_VERSIONS:
                 raise ValueError(
                     f"{path}: schema version {head.get('version')!r}, "
-                    f"this reader supports {SCHEMA_VERSION}")
+                    f"this reader supports {SUPPORTED_VERSIONS}")
             log.meta = dict(head.get("meta", {}))
             for line in f:
                 line = line.strip()
@@ -261,7 +286,10 @@ def validate_events(events: Iterable[Mapping[str, Any]]) -> List[str]:
             if tf in spec and ev.get(tf) not in TIER_NAMES + ("none",):
                 problems.append(
                     f"{where} ({kind}): bad tier name {ev.get(tf)!r}")
-        extra = set(ev) - set(spec) - {"t", "kind"} - set(WALL_FIELDS)
+        if "node" in ev and not isinstance(ev["node"], str):
+            problems.append(f"{where} ({kind}): node is not a string")
+        extra = (set(ev) - set(spec) - {"t", "kind"} - set(WALL_FIELDS)
+                 - set(ANNOTATION_FIELDS))
         if extra:
             problems.append(
                 f"{where} ({kind}): unexpected fields {sorted(extra)}")

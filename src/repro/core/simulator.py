@@ -179,7 +179,11 @@ class Simulator:
             self._arr_idx += 1
             return
 
-    def run(self) -> QoSLedger:
+    def start(self) -> None:
+        """Prime the event heap: arrival cursor, prewarm tick, pause pool.
+        Split from :meth:`run` so an external orchestrator (the topology
+        driver) can interleave several Simulator instances event by
+        event."""
         self._arrival_iter = iter(self.trace)
         self._push_next_arrival()
         if self.suite.prewarm is not None:
@@ -192,17 +196,32 @@ class Simulator:
             for w in range(self.cfg.num_workers):
                 self.state.reserve(w, footprint / self.cfg.num_workers)
 
-        while self._events:
-            t, rank, _, kind, payload = heapq.heappop(self._events)
-            if rank == 0:
-                self._push_next_arrival()   # refill the trace cursor
-            self.events_processed += 1
-            if t > self.trace.horizon and kind == "tick":
-                continue
-            self.state.now = max(self.state.now, t)
-            getattr(self, f"_on_{kind}")(payload)
+    def next_time(self) -> float:
+        """Timestamp of the next pending event (inf when drained)."""
+        return self._events[0][0] if self._events else float("inf")
 
-        # close out idle accounting at horizon
+    def step(self) -> None:
+        """Pop and process exactly one event."""
+        t, rank, _, kind, payload = heapq.heappop(self._events)
+        if rank == 0:
+            self._push_next_arrival()   # refill the trace cursor
+        self.events_processed += 1
+        if t > self.trace.horizon and kind == "tick":
+            return
+        self.state.now = max(self.state.now, t)
+        getattr(self, f"_on_{kind}")(payload)
+
+    def inject(self, t: float, inv: Invocation,
+               arrival: Optional[float] = None) -> None:
+        """Externally inject an arrival at ``t`` (topology routing): the
+        request reaches this node at ``t`` but its latency clock started
+        at ``arrival`` (the original ingress time), so network delay
+        lands in end-to-end latency."""
+        self._push(t, "arrival", _Pending(inv, t if arrival is None
+                                          else arrival))
+
+    def finish(self) -> QoSLedger:
+        """Close out idle accounting at the horizon."""
         self.state.close_out(self.trace.horizon)
         # (legacy generic) pause pool idle cost over whole horizon
         if self.suite.startup.pause_pool_size:
@@ -210,6 +229,12 @@ class Simulator:
                 self.trace.horizon * self.suite.startup.pause_pool_size,
                 self.suite.startup.pause_pool_mb / 1024.0, tier="paused")
         return self.ledger
+
+    def run(self) -> QoSLedger:
+        self.start()
+        while self._events:
+            self.step()
+        return self.finish()
 
     # ------------------------------------------------------------------ #
     # handlers

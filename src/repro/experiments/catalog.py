@@ -363,6 +363,77 @@ register_sweep(Sweep(
                 "bench_batchsim >=50x throughput gate"))
 
 
+# --------------------------------------------------------------------------- #
+# edge–cloud topology cells (ROADMAP item 4): node tiers + network +
+# QoS-class offloading (repro.topology).  The Pareto workloads are sized
+# so the concurrently-warm set (num_functions x 1 GB) overflows the edge
+# tier alone AND the cloud tier alone but fits the two combined — the
+# regime where always_local thrashes, always_cloud pays network on every
+# request and still thrashes, and a routing policy that PARTITIONS the
+# warm set across tiers dominates both (bench_topology's gate).
+# --------------------------------------------------------------------------- #
+from repro.topology.spec import (NetworkSpec, NodeSpec,  # noqa: E402
+                                 TopologySpec)
+
+TOPO_QOS = {"critical": 0.1, "standard": 0.6, "batch": 0.3}
+AZURE_TOPO = WorkloadSpec(
+    "azure_like", {"horizon": 900.0, "num_functions": 12}, seed=17,
+    name="azure_topo", qos_classes=TOPO_QOS)
+BURSTY_TOPO = WorkloadSpec(
+    "bursty", {"base_rate": 0.2, "burst_rate": 6.0, "horizon": 900.0,
+               "num_functions": 12}, seed=18,
+    name="bursty_topo", qos_classes=TOPO_QOS)
+
+# edge: small pool, zero network price; cloud: bigger but not big enough
+# for the whole warm set, 80 ms away
+EDGE_CLOUD = TopologySpec(
+    nodes=(NodeSpec("edge", ClusterSpec(num_workers=2,
+                                        worker_memory_mb=3072.0)),
+           NodeSpec("cloud", ClusterSpec(num_workers=4,
+                                         worker_memory_mb=2048.0))),
+    network=NetworkSpec(rtt_s={"cloud|edge": 0.08},
+                        bandwidth_mbps={"cloud|edge": 200.0}),
+    offload="greedy", payload_kb=256.0)
+
+TOPO = register(Scenario(
+    name="topo", workload=AZURE_TOPO, policy="provider_default",
+    topology=EDGE_CLOUD,
+    description="edge–cloud base: cold-start avoidance vs network price "
+                "under QoS-class offloading"))
+
+register_sweep(Sweep(
+    name="topo/edge_cloud_pareto", base=TOPO,
+    axes={"workload": (AZURE_TOPO, BURSTY_TOPO),
+          "topology.offload": ("always_local", "always_cloud",
+                               "local_first", "greedy", "probabilistic")},
+    description="bench_topology Pareto gate: offloading policies vs the "
+                "always-local and always-cloud baselines"))
+
+# sim-vs-fleet identity cell: the edge holds only 4 of the 6 functions,
+# so greedy genuinely routes cross-node — but BEFORE either node hits
+# memory pressure (greedy's eviction penalty steers overflow away first;
+# the drivers' queueing disciplines legally diverge under pressure, same
+# contract as the flat calib cells), with QoS classes on the gate path
+POISSON_TOPO = WorkloadSpec(
+    "poisson", {"rate": 0.5, "horizon": 600.0, "num_functions": 6},
+    seed=33, name="poisson_topo", qos_classes={"gold": 0.25, "silver": 0.75})
+
+CALIBRATION["topo_basic"] = register(Scenario(
+    name="calib/topo_basic", workload=POISSON_TOPO,
+    policy="provider_default", calibrated=True,
+    topology=TopologySpec(
+        nodes=(NodeSpec("edge", ClusterSpec(num_workers=2,
+                                            worker_memory_mb=2048.0)),
+               NodeSpec("cloud", ClusterSpec(num_workers=2,
+                                             worker_memory_mb=8192.0))),
+        network=NetworkSpec(rtt_s={"cloud|edge": 0.06},
+                            bandwidth_mbps={"cloud|edge": 150.0}),
+        offload="greedy", payload_kb=128.0),
+    description="edge–cloud identity cell: per-node kernels + shared "
+                "router must replay sim-vs-fleet event-identical, with "
+                "real cross-node offloads on the path"))
+
+
 def study_sweep():
     """The full-catalog policy sweep for examples/coldstart_study.py.
 

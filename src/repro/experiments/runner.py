@@ -75,6 +75,21 @@ def run(scenario: Union[str, Scenario], driver: str = "sim", *,
     if driver not in DRIVERS:
         raise ValueError(f"unknown driver {driver!r}; one of {DRIVERS}")
     cm = cost_model if cost_model is not None else sc.cost_model()
+    if sc.topology is not None:
+        # edge–cloud topology axis: one cluster kernel per node tier, the
+        # shared router on top (repro.topology.driver); returns a
+        # TopologyLedger (merged summary() schema + per-node/per-class
+        # breakdown keys)
+        if driver not in ("sim", "fleet"):
+            raise ValueError(
+                f"scenario {sc.name!r} has a topology; driver {driver!r} "
+                "is not supported (topology runs need per-node kernels — "
+                "use driver='sim' or 'fleet')")
+        from repro.topology.driver import run_topology
+        if events is not None:
+            events.meta.setdefault("scenario", sc.name)
+            events.meta.setdefault("driver", driver)
+        return run_topology(sc, driver, cost_model=cm, events=events)
     if driver == "batch":
         if events is not None:
             raise ValueError("driver='batch' keeps aggregates, not "

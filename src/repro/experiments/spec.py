@@ -51,6 +51,13 @@ class WorkloadSpec:
     params: Mapping[str, Any] = field(default_factory=dict)
     seed: Optional[int] = None
     name: Optional[str] = None          # display label (defaults to generator)
+    # QoS classes as arrival weights (faas-offloading-sim idiom): each
+    # invocation is assigned a class with probability proportional to its
+    # weight — deterministically, via repro.topology.qos.assign_class on
+    # the scenario's derived "qos_class" seed.  Empty = single "default"
+    # class.  Only topology runs route on classes, but per-class ledger
+    # breakdowns work for any scenario that declares them.
+    qos_classes: Mapping[str, float] = field(default_factory=dict)
 
     @property
     def label(self) -> str:
@@ -68,12 +75,14 @@ class WorkloadSpec:
 
     def to_dict(self) -> Dict[str, Any]:
         return {"generator": self.generator, "params": dict(self.params),
-                "seed": self.seed, "name": self.name}
+                "seed": self.seed, "name": self.name,
+                "qos_classes": dict(self.qos_classes)}
 
     @classmethod
     def from_dict(cls, d: Mapping[str, Any]) -> "WorkloadSpec":
         return cls(generator=d["generator"], params=dict(d.get("params", {})),
-                   seed=d.get("seed"), name=d.get("name"))
+                   seed=d.get("seed"), name=d.get("name"),
+                   qos_classes=dict(d.get("qos_classes", {})))
 
 
 # --------------------------------------------------------------------------- #
@@ -152,6 +161,14 @@ class Scenario:
     calibrated: bool = False            # pick up ./calibration.json if present
     seed: int = 0
     description: str = ""
+    # edge–cloud topology axis (repro.topology): node tiers + network +
+    # offloading policy.  None = the flat single-cluster scenario every
+    # driver supports; set = sim/fleet route each arrival through the
+    # offloading decision to one cluster kernel per node.  Typed as Any
+    # to keep this module import-light (the real type is
+    # repro.topology.spec.TopologySpec, which imports ClusterSpec from
+    # here — serialization imports it lazily).
+    topology: Optional[Any] = None
 
     # ---- seeds -------------------------------------------------------- #
     def seed_for(self, component: str) -> int:
@@ -230,6 +247,8 @@ class Scenario:
             "calibrated": self.calibrated,
             "seed": self.seed,
             "description": self.description,
+            "topology": (None if self.topology is None
+                         else self.topology.to_dict()),
         }
 
     @classmethod
@@ -238,12 +257,17 @@ class Scenario:
         d["workload"] = WorkloadSpec.from_dict(d["workload"])
         d["cluster"] = ClusterSpec.from_dict(d.get("cluster", {}))
         d["engine"] = EngineSpec.from_dict(d.get("engine", {}))
+        if d.get("topology") is not None:
+            from repro.topology.spec import TopologySpec
+            d["topology"] = TopologySpec.from_dict(d["topology"])
         return cls(**d)
 
 
 def _replace_path(obj, parts: Sequence[str], value):
     """Functional deep-replace along a dotted path through frozen
-    dataclasses and plain dicts."""
+    dataclasses, plain dicts, and tuples/lists (numeric index), e.g.
+    ``topology.nodes.0.cluster.num_workers`` or
+    ``topology.network.rtt_s.cloud|edge``."""
     head = parts[0]
     if dataclasses.is_dataclass(obj):
         names = {f.name for f in dataclasses.fields(obj)}
@@ -259,4 +283,10 @@ def _replace_path(obj, parts: Sequence[str], value):
         d[head] = value if len(parts) == 1 \
             else _replace_path(d[head], parts[1:], value)
         return d
+    if isinstance(obj, (tuple, list)) and head.lstrip("-").isdigit():
+        idx = int(head)
+        items = list(obj)
+        items[idx] = value if len(parts) == 1 \
+            else _replace_path(items[idx], parts[1:], value)
+        return tuple(items) if isinstance(obj, tuple) else items
     raise TypeError(f"cannot descend into {type(obj).__name__} at {head!r}")

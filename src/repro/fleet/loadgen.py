@@ -135,7 +135,11 @@ class FleetRunner:
                        seq_len=seq, chain=tuple(chain))
 
     # ------------------------------------------------------------------ #
-    def run(self) -> QoSLedger:
+    def start(self) -> None:
+        """Prime the heap: all trace arrivals, autoscaler tick, pause
+        pool.  Split from :meth:`run` so an external orchestrator (the
+        topology driver) can interleave several FleetRunner instances
+        event by event."""
         rng = np.random.default_rng(self.cfg.seed)
         # streams iterate lazily too; the fleet driver still enqueues all
         # arrivals upfront (it replays by clock), so only the scalar sim
@@ -153,15 +157,28 @@ class FleetRunner:
             for w in range(self.cfg.num_workers):
                 self.state.reserve(w, footprint / self.cfg.num_workers)
 
-        while self._events:
-            t, _, kind, payload = heapq.heappop(self._events)
-            if t > self.trace.horizon and kind == "tick":
-                continue
-            self.clock.sleep_until(t)
-            self.state.now = max(self.state.now, t)
-            getattr(self, f"_on_{kind}")(payload)
+    def next_time(self) -> float:
+        """Timestamp of the next pending event (inf when drained)."""
+        return self._events[0][0] if self._events else float("inf")
 
-        # close out idle accounting at horizon
+    def step(self) -> None:
+        """Pop and process exactly one event."""
+        t, _, kind, payload = heapq.heappop(self._events)
+        if t > self.trace.horizon and kind == "tick":
+            return
+        self.clock.sleep_until(t)
+        self.state.now = max(self.state.now, t)
+        getattr(self, f"_on_{kind}")(payload)
+
+    def inject(self, t: float, function: str, arrival: float,
+               chain=()) -> None:
+        """Externally inject an arrival at ``t`` (topology routing) whose
+        latency clock started at ``arrival`` — the original ingress time —
+        so network delay lands in end-to-end latency."""
+        self._push(t, "arrival", self._mk_request(function, arrival, chain))
+
+    def finish(self) -> QoSLedger:
+        """Close out idle accounting at the horizon."""
         self.state.close_out(self.trace.horizon)
         if self.suite.startup.pause_pool_size:
             self.ledger.add_idle(
@@ -169,6 +186,12 @@ class FleetRunner:
                 self.suite.startup.pause_pool_mb / 1024.0, tier="paused")
         self.ledger.dropped = self.frontend.drops.total
         return self.ledger
+
+    def run(self) -> QoSLedger:
+        self.start()
+        while self._events:
+            self.step()
+        return self.finish()
 
     # ------------------------------------------------------------------ #
     # handlers
